@@ -1,0 +1,42 @@
+"""Kernel micro-benchmarks: dual-mode unit vs native ops at model shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import softmax_unit as unit
+from repro.models.flash import flash_attention
+
+from .common import emit, time_fn
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    # softmax at attention-row shapes
+    for rows, cols in ((512, 128), (1024, 1024)):
+        x = jnp.asarray(rng.normal(size=(rows, cols)) * 3, jnp.float32)
+        t_unit = time_fn(jax.jit(unit.softmax_dualmode), x)
+        t_nat = time_fn(jax.jit(lambda t: jax.nn.softmax(t, -1)), x)
+        emit(f"kernels/softmax_unit_{rows}x{cols}_us", t_unit,
+             f"native={t_nat:.1f}us ratio={t_unit/t_nat:.2f}")
+    # GELU at FFN shapes
+    z = jnp.asarray(rng.normal(size=(512, 2816)), jnp.float32)
+    t_unit = time_fn(jax.jit(unit.gelu_dualmode), z)
+    t_nat = time_fn(jax.jit(jax.nn.gelu), z)
+    emit("kernels/gelu_unit_512x2816_us", t_unit,
+         f"native={t_nat:.1f}us ratio={t_unit/t_nat:.2f}")
+    # flash attention vs naive at a mid shape
+    b, s, k, g, h = 1, 1024, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, k, g, h)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    valid = jnp.ones((b, s), bool)
+    f = jax.jit(lambda q, kk, v: flash_attention(
+        q, kk, v, q_pos=q_pos, kv_valid=valid, block=256))
+    emit("kernels/flash_attn_1k_us", time_fn(f, q, kk, v), "block=256")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Generate the §Dry-run and §Roofline markdown tables for EXPERIMENTS.md
+from benchmarks/artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def sec(t):
+    return f"{t:.2e}"
+
+
+def main() -> None:
+    recs = load()
+    single = [r for r in recs if r.get("mesh") == "pod16x16"]
+    multi = [r for r in recs if r.get("mesh") == "pod2x16x16"]
+
+    print("### §Dry-run — compile matrix\n")
+    print("| arch | shape | kind | single-pod 16x16 | multi-pod 2x16x16 | "
+          "resident/chip | fits 16G |")
+    print("|---|---|---|---|---|---|---|")
+    multi_by = {(r["arch"], r["shape"]): r for r in multi}
+    for r in single:
+        m = multi_by.get((r["arch"], r["shape"]))
+        s_ok = ("OK" if r.get("ok") else
+                "FAIL: " + r.get("error", "?")[:40])
+        m_ok = ("OK" if (m and m.get("ok")) else
+                ("FAIL" if m else "—"))
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r.get('kind','?')} | "
+              f"{s_ok} ({r.get('compile_s','?')}s) | {m_ok} | "
+              f"{gib(mem.get('resident_bytes_per_chip', 0))} GiB | "
+              f"{'yes' if mem.get('fits_v5e_16g') else 'NO'} |")
+
+    print("\n### §Roofline — per-chip time bounds (single-pod, per step)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | "
+          "bottleneck | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in single:
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        frac = rf["t_compute"] / rf["t_bound"] if rf["t_bound"] else 0
+        print(f"| {r['arch']} | {r['shape']} | {sec(rf['t_compute'])} | "
+              f"{sec(rf['t_memory'])} | {sec(rf['t_collective'])} | "
+              f"{rf['bottleneck']} | {r.get('useful_ratio', 0):.2f} | "
+              f"{frac:.2f} |")
+
+    n_ok = sum(r.get("ok", False) for r in recs)
+    print(f"\n{n_ok}/{len(recs)} cells compiled OK.")
+
+
+if __name__ == "__main__":
+    main()

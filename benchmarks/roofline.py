@@ -1,0 +1,58 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun)
+and prints, per (arch x shape x mesh): the three per-chip time bounds, the
+dominant term, MODEL_FLOPS/HLO_FLOPs, and what would move the bottleneck.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+_ADVICE = {
+    "compute": "raise MXU utilization: bigger per-chip tiles (less TP) or "
+               "fewer remat recomputes",
+    "memory": "cut HBM round-trips: fuse flash-attention intermediates "
+              "(Pallas kernel), bf16 score tiles, wider fusion regions",
+    "collective": "reshard: move collectives off the critical path "
+                  "(reduce-scatter grads, overlap all-gather with compute, "
+                  "less TP for small models)",
+}
+
+
+def load() -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        print("no dry-run artifacts found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both")
+        return
+    ok = [r for r in recs if r.get("ok")]
+    emit("roofline/cells_ok", 0.0, f"{len(ok)}/{len(recs)}")
+    for r in ok:
+        if r["mesh"] != "pod16x16":
+            continue                      # roofline table is single-pod
+        rf = r["roofline"]
+        t_b = rf["t_bound"]
+        frac = (rf["t_compute"] / t_b) if t_b else 0.0
+        emit(f"roofline/{r['arch']}/{r['shape']}", t_b * 1e6,
+             f"tc={rf['t_compute']:.3e}s tm={rf['t_memory']:.3e}s "
+             f"tn={rf['t_collective']:.3e}s dom={rf['bottleneck']} "
+             f"useful={r.get('useful_ratio', 0):.2f} "
+             f"roofline_frac={frac:.2f} fix:{_ADVICE[rf['bottleneck']]}")
+
+
+if __name__ == "__main__":
+    main()

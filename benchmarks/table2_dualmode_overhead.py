@@ -1,0 +1,53 @@
+"""Paper Table II analogue: cost of making the softmax unit dual-mode.
+
+ASIC version: single-mode vs dual-mode softmax area/power (paper: +9.9%
+area, +2.6% power for N=8/32).  TPU-kernel version: the dual-mode kernel
+family is a compile-time specialization, so the analogue costs are
+  (a) extra program ops of GELU mode vs plain softmax mode at equal
+      element throughput (the pair-max/pair-sum/pair-log datapath), and
+  (b) wall-time overhead of the bit-accurate int path vs its float lane
+      (what the fixed-point emulation costs ON THIS HOST — on TPU the int
+      path IS the unit, there is no emulation overhead).
+Runtime mode-dispatch cost is structurally ZERO: mode is a static kernel
+parameter, each binary contains exactly one datapath (shown by op counts).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import softmax_unit as unit
+from repro.kernels import ops
+
+from .common import emit, hlo_op_counts, time_fn, total_real_ops
+
+N_ELEMS = (8, 32)          # the paper's vector widths
+ROWS = 4096                # elements processed per call at equal throughput
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for n in N_ELEMS:
+        x = jnp.asarray(rng.normal(size=(ROWS, n)) * 3, jnp.float32)
+        # single mode: softmax over N; dual 'GELU mode': N/2 gelu outputs
+        z = jnp.asarray(rng.normal(size=(ROWS, n // 2)) * 3, jnp.float32)
+
+        c_soft = hlo_op_counts(lambda t: unit.softmax_dualmode(t), x)
+        c_gelu = hlo_op_counts(lambda t: unit.gelu_dualmode(t), z)
+        o_soft, o_gelu = total_real_ops(c_soft), total_real_ops(c_gelu)
+        emit(f"table2/N{n}/softmax_mode_ops", 0.0, f"ops={o_soft}")
+        emit(f"table2/N{n}/gelu_mode_ops", 0.0, f"ops={o_gelu}")
+        emit(f"table2/N{n}/mode_op_overhead", 0.0,
+             f"ratio={(o_gelu / o_soft):.2f}")
+
+        t_int = time_fn(lambda t: ops.softmax(t, use_kernel=False), x)
+        t_float = time_fn(
+            lambda t: ops.softmax(t, precision="float", use_kernel=False), x)
+        emit(f"table2/N{n}/softmax_int_us", t_int, "bit-accurate unit")
+        emit(f"table2/N{n}/softmax_float_us", t_float, "float lane")
+        g_int = time_fn(lambda t: ops.gelu(t, use_kernel=False), z)
+        emit(f"table2/N{n}/gelu_int_us", g_int, "GELU mode, N/2 outputs")
+
+
+if __name__ == "__main__":
+    main()

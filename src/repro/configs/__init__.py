@@ -1,0 +1,4 @@
+"""Architecture configs — one module per assigned arch + the paper's BERT."""
+from .base import (LayerSpec, MLACfg, MambaCfg, ModelConfig, MoECfg,  # noqa
+                   SHAPES, ShapeCell, TrainConfig)
+from .registry import ARCH_IDS, get_config, input_specs, reduced_config  # noqa

@@ -1,0 +1,78 @@
+"""Arch registry: --arch <id> -> ModelConfig, reduced smoke config, and
+ShapeDtypeStruct input specs for every shape cell (dry-run stand-ins,
+no device allocation)."""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, SHAPES, ShapeCell
+
+_MODULES = {
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen3-14b": "qwen3_14b",
+    "yi-6b": "yi_6b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "minicpm3-4b": "minicpm3_4b",
+    "llama-3.2-vision-11b": "llama3_2_vision_11b",
+    "whisper-base": "whisper_base",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "bert-base": "bert_base",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "bert-base"]   # the 10 assigned
+
+
+def _mod(arch_id: str):
+    try:
+        return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    except KeyError:
+        raise ValueError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).CONFIG
+
+
+def reduced_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).REDUCED
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic families;
+    decode only for archs with a decoder."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch; long_500k needs sub-quadratic"
+    if cell.kind == "decode" and cfg.family == "encoder":
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell | str,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train   : tokens+labels (B,S) [+ modality stubs]
+    prefill : tokens (B,S) [+ modality stubs]
+    decode  : tokens (B,1) — caches are built by the step fn factory
+    """
+    if isinstance(cell, str):
+        cell = SHAPES[cell]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if cell.kind == "train":
+        specs = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    elif cell.kind == "prefill":
+        specs = {"tokens": sds((b, s), i32)}
+    else:  # decode: one new token, cache length = seq_len
+        specs = {"tokens": sds((b, 1), i32)}
+    if cfg.family == "encdec" and cell.kind != "decode":
+        specs["frames"] = sds((b, cfg.n_frames, cfg.d_model), dtype)
+    if cfg.family == "vlm" and cell.kind != "decode":
+        specs["image_embeds"] = sds((b, cfg.n_img_tokens, cfg.d_model), dtype)
+    return specs

@@ -1,0 +1,6 @@
+"""Core: the paper's contribution — GELU via a dual-mode softmax unit."""
+from .activations import ACTIVATIONS, get_activation  # noqa: F401
+from .softmax_unit import (  # noqa: F401
+    gelu_dualmode, gelu_int, silu_dualmode, silu_int,
+    softmax_dualmode, softmax_int,
+)

@@ -1,0 +1,76 @@
+"""Fixed-point arithmetic helpers (paper §IV numerics).
+
+The paper evaluates all designs with *16-bit fixed-point inputs with five
+integer bits* and *32-bit integer arithmetic for all internal operations*
+(same regime as i-GELU / I-BERT).  We emulate that bit-accurately with
+int32 tensors:
+
+  input format  S5.10  — 1 sign bit, 5 integer bits, 10 fraction bits,
+                          scale 2**-10, representable range [-32, 32).
+  internal      int32  — products are shifted back to a documented scale
+                          at every step; no hidden floating point.
+
+All functions are jnp-traceable and usable inside Pallas kernel bodies
+(interpret mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --- canonical formats ----------------------------------------------------
+IN_FRAC = 10          # S5.10 input fraction bits (paper: 5 integer bits)
+IN_BITS = 16
+IN_MIN = -(1 << (IN_BITS - 1))          # -32768
+IN_MAX = (1 << (IN_BITS - 1)) - 1       # +32767
+EXP_FRAC = 14         # scale of PWL-exp2 outputs: 2**v in [1,2) -> [2**14, 2**15)
+T_FRAC = 16           # scale of the log2-domain quantities (t = x*log2e, w)
+
+I32 = jnp.int32
+
+
+def quantize(x, frac_bits: int = IN_FRAC):
+    """float -> saturating S(15-frac).frac int32 (16-bit range)."""
+    q = jnp.round(x * (1 << frac_bits)).astype(I32)
+    return jnp.clip(q, IN_MIN, IN_MAX)
+
+
+def dequantize(q, frac_bits: int = IN_FRAC):
+    return q.astype(jnp.float32) * (1.0 / (1 << frac_bits))
+
+
+def fx_mul(a, b, shift: int):
+    """int32 product, arithmetic-shifted right by `shift` (scale fixup)."""
+    return (a.astype(I32) * b.astype(I32)) >> shift
+
+
+def floor_log2(v):
+    """Position of the leading one bit of v (v >= 1), i.e. floor(log2(v)).
+
+    Bit-exact leading-one detector, the fixed-point analogue of the
+    normalization step of the PWL forward log converter [Kim et al. 2006].
+    """
+    v = v.astype(I32)
+    r = jnp.zeros_like(v)
+    for shift in (16, 8, 4, 2, 1):
+        cond = v >= (1 << shift)
+        v = jnp.where(cond, v >> shift, v)
+        r = r + jnp.where(cond, shift, 0)
+    return r
+
+
+def mantissa_frac(s, e_pos, frac_bits: int = T_FRAC):
+    """Fractional part of the mantissa of s (int, MSB at e_pos).
+
+    Returns (s / 2**e_pos - 1) at scale 2**-frac_bits, in [0, 2**frac_bits).
+    Uses only shifts (variable shift amounts are element-wise in XLA).
+    """
+    s = s.astype(I32)
+    rem = s - (I32(1) << e_pos)            # strip leading one
+    up = jnp.maximum(frac_bits - e_pos, 0)
+    down = jnp.maximum(e_pos - frac_bits, 0)
+    return (rem << up) >> down
+
+
+def sat_rshift(x, n):
+    """Arithmetic right shift with shift amount clamped to [0, 31]."""
+    return x >> jnp.clip(n, 0, 31)

@@ -1,0 +1,52 @@
+"""i-GELU — the integer-only GELU of I-BERT [Kim et al., ICML 2021].
+
+This is the state-of-the-art baseline the paper compares against (its
+'i-GELU' model in Table I and the 'N/2 i-GELU units' design of Fig. 4).
+
+i-GELU approximates erf with a clipped second-order polynomial
+
+    erf(x) ~= sign(x) * [ a (min(|x|, -b) + b)^2 + 1 ],   a=-0.2888, b=-1.769
+
+and evaluates GELU(x) = x * 0.5 * (1 + erf(x / sqrt(2))) in integer
+arithmetic.  We implement both the float form and a bit-level int32 form in
+the same S5.10 regime as the dual-mode unit, so hardware-style comparisons
+(benchmarks/fig4) are apples-to-apples.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .fixedpoint import I32, IN_FRAC, dequantize, quantize
+
+_A = -0.2888
+_B = -1.769
+_INV_SQRT2_Q = int(round((1.0 / math.sqrt(2.0)) * (1 << 15)))   # Q0.15
+_B_Q = int(round(-_B * (1 << IN_FRAC)))                         # 1.769 @ S5.10
+_A_Q = int(round(-_A * (1 << 14)))                              # 0.2888 @ Q.14
+_ONE = 1 << IN_FRAC
+
+
+def igelu_float(x):
+    """Reference float i-GELU (I-BERT eq. 5)."""
+    s = x / math.sqrt(2.0)
+    l = jnp.sign(s) * (_A * (jnp.clip(jnp.abs(s), max=-_B) + _B) ** 2 + 1.0)
+    return x * 0.5 * (1.0 + l)
+
+
+def igelu_int(x_fx):
+    """Bit-level int32 i-GELU.  S5.10 -> S5.10."""
+    x = x_fx.astype(I32)
+    s = (x * I32(_INV_SQRT2_Q)) >> 15                 # x/sqrt2 @ 2**-IN_FRAC
+    t = jnp.minimum(jnp.abs(s), I32(_B_Q)) - I32(_B_Q)          # <= 0
+    sq = (t * t) >> IN_FRAC                           # @ 2**-IN_FRAC
+    poly = I32(_ONE) - ((sq * I32(_A_Q)) >> 14)       # a*sq+1, @ 2**-IN_FRAC
+    erf = jnp.sign(s) * poly
+    # x * (1 + erf) / 2 : product @ 2**-2*IN_FRAC -> shift by IN_FRAC+1
+    return (x * (I32(_ONE) + erf)) >> (IN_FRAC + 1)
+
+
+def igelu_quant(x):
+    """float in/out through the int unit (the Table-I 'i-GELU' model)."""
+    return dequantize(igelu_int(quantize(x)), IN_FRAC)

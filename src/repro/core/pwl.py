@@ -1,0 +1,107 @@
+"""Eight-piece piecewise-linear (PWL) approximations (paper §III-A).
+
+The paper's softmax datapath evaluates
+  * 2**v for v in [0,1)      (the fractional part of each exponent), and
+  * log2(m) for m in [1,2)   (the mantissa of the forward log converter
+                              [Kim et al., JSSC 2006])
+with 8-segment PWL approximations whose coefficients were derived with
+`pwlf` on the target range.  We derive coefficients by per-segment least
+squares on a dense grid (deterministic at import; error <= the continuous
+pwlf fit used in the paper) and quantize them to fixed point.
+
+Segment selection is the top-3 bits of the fraction — exactly the mux a
+hardware PWL unit would use.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .fixedpoint import I32, T_FRAC, EXP_FRAC
+
+N_SEG = 8
+_COEF_FRAC = 14          # coefficient quantization (Q2.14)
+
+
+def _fit_pwl(fn, lo: float, hi: float, n_seg: int = N_SEG, grid: int = 4096):
+    """Per-segment least-squares linear fit of fn over [lo, hi)."""
+    slopes, intercepts = [], []
+    edges = np.linspace(lo, hi, n_seg + 1)
+    for i in range(n_seg):
+        x = np.linspace(edges[i], edges[i + 1], grid, endpoint=False)
+        y = fn(x)
+        a, b = np.polyfit(x, y, 1)
+        slopes.append(a)
+        intercepts.append(b)
+    return np.asarray(slopes), np.asarray(intercepts)
+
+
+# --- float coefficients (reference) ----------------------------------------
+EXP2_SLOPE_F, EXP2_INTERCEPT_F = _fit_pwl(lambda v: np.exp2(v), 0.0, 1.0)
+LOG2_SLOPE_F, LOG2_INTERCEPT_F = _fit_pwl(lambda f: np.log2(1.0 + f), 0.0, 1.0)
+
+# --- quantized coefficients (the bits the hardware would store) -------------
+EXP2_SLOPE_Q = np.round(EXP2_SLOPE_F * (1 << _COEF_FRAC)).astype(np.int32)
+EXP2_INTERCEPT_Q = np.round(EXP2_INTERCEPT_F * (1 << _COEF_FRAC)).astype(np.int32)
+LOG2_SLOPE_Q = np.round(LOG2_SLOPE_F * (1 << _COEF_FRAC)).astype(np.int32)
+LOG2_INTERCEPT_Q = np.round(LOG2_INTERCEPT_F * (1 << _COEF_FRAC)).astype(np.int32)
+
+
+def _mux8(seg, table):
+    """8-way coefficient mux as a select chain (TPU/Pallas friendly —
+    no gather; this is literally the hardware segment mux)."""
+    out = jnp.full_like(seg, int(table[0]))
+    for s in range(1, N_SEG):
+        out = jnp.where(seg == s, I32(int(table[s])), out)
+    return out
+
+
+def _pwl_int(frac, slope_q, intercept_q, frac_bits: int, out_frac: int):
+    """Evaluate a quantized 8-segment PWL at `frac` (scale 2**-frac_bits).
+
+    Output scale 2**-out_frac.  Pure int32: one mux, one multiply,
+    one shift, one add — the same op count as the hardware lane.
+    """
+    frac = frac.astype(I32)
+    seg = (frac >> (frac_bits - 3)).astype(I32)          # top-3 bits
+    a = _mux8(seg, slope_q)
+    b = _mux8(seg, intercept_q)
+    # a*frac: scale 2**-(COEF_FRAC+frac_bits) -> shift to out_frac
+    prod = (a * frac) >> (_COEF_FRAC + frac_bits - out_frac)
+    return prod + (b >> (_COEF_FRAC - out_frac) if _COEF_FRAC >= out_frac
+                   else b << (out_frac - _COEF_FRAC))
+
+
+def exp2_frac_int(v):
+    """2**v for v in [0,1) at scale 2**-T_FRAC -> result scale 2**-EXP_FRAC."""
+    return _pwl_int(v, EXP2_SLOPE_Q, EXP2_INTERCEPT_Q, T_FRAC, EXP_FRAC)
+
+
+def log2_mant_int(f):
+    """log2(1+f) for f in [0,1) at scale 2**-T_FRAC -> scale 2**-T_FRAC."""
+    return _pwl_int(f, LOG2_SLOPE_Q, LOG2_INTERCEPT_Q, T_FRAC, T_FRAC)
+
+
+# --- float PWL (algorithm-faithful float path, used by ref oracles) ---------
+def exp2_frac_float(v):
+    seg = jnp.clip((v * N_SEG).astype(jnp.int32), 0, N_SEG - 1)
+    a = jnp.asarray(EXP2_SLOPE_F, dtype=v.dtype)[seg]
+    b = jnp.asarray(EXP2_INTERCEPT_F, dtype=v.dtype)[seg]
+    return a * v + b
+
+
+def log2_mant_float(f):
+    seg = jnp.clip((f * N_SEG).astype(jnp.int32), 0, N_SEG - 1)
+    a = jnp.asarray(LOG2_SLOPE_F, dtype=f.dtype)[seg]
+    b = jnp.asarray(LOG2_INTERCEPT_F, dtype=f.dtype)[seg]
+    return a * f + b
+
+
+def pwl_max_error():
+    """(exp2_err, log2_err): max abs error of the float fits on their ranges."""
+    v = np.linspace(0, 1, 1 << 16, endpoint=False)
+    e1 = np.abs(np.exp2(v) - (EXP2_SLOPE_F[np.minimum((v * 8).astype(int), 7)] * v
+                              + EXP2_INTERCEPT_F[np.minimum((v * 8).astype(int), 7)]))
+    e2 = np.abs(np.log2(1 + v) - (LOG2_SLOPE_F[np.minimum((v * 8).astype(int), 7)] * v
+                                  + LOG2_INTERCEPT_F[np.minimum((v * 8).astype(int), 7)]))
+    return float(e1.max()), float(e2.max())

@@ -1,0 +1,161 @@
+"""The dual-mode softmax unit (paper §III, Fig. 2/3) — bit-accurate emulation.
+
+Normal mode implements Eq. (10) — division in the logarithm domain:
+
+    y_i = exp(x_i - max(x) - log(sum_j exp(x_j - max(x))))
+        = 2**(t_i - lmax - log2(sum_j 2**(t_j - lmax)))     with t = x*log2(e)
+
+Each exponential is decomposed 2**t = 2**u * 2**v (u integer -> shift,
+v in [0,1) -> 8-piece PWL); the log uses a leading-one detector plus a
+mantissa PWL (the forward log converter of [Kim 2006]).
+
+GELU mode (Fig. 3) computes, per element z (Eq. 8):
+
+    k       = sqrt(2/pi) * (z + 0.044715 z^3)
+    GELU(z) = z * softmax_1^2([k, -k])
+
+by running the *same* exp/log datapath independently on the two-element
+vector [k, -k].  SiLU mode (ours, beyond-paper) is the exact identity
+SiLU(z) = z * softmax_1^2([z/2, -z/2]) — only the k-datapath differs.
+
+Everything here is int32 (inputs S5.10) and jnp-traceable, so the same code
+is the Pallas kernel body's arithmetic and the oracle for its tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .fixedpoint import (
+    EXP_FRAC, I32, IN_FRAC, T_FRAC,
+    dequantize, floor_log2, mantissa_frac, quantize, sat_rshift,
+)
+from .pwl import exp2_frac_int, log2_mant_int
+
+# fixed-point constants (the ROM words of the datapath)
+_LOG2E_FRAC = 12
+LOG2E_Q = int(round(math.log2(math.e) * (1 << _LOG2E_FRAC)))        # 5909
+GELU_A_Q = int(round(0.044715 * (1 << 16)))                         # cubic coeff
+GELU_C_Q = int(round(math.sqrt(2.0 / math.pi) * (1 << 14)))         # sqrt(2/pi)
+
+
+def _to_log2_domain(d, in_frac: int):
+    """t = d * log2(e) at scale 2**-T_FRAC (d at scale 2**-in_frac, d<=0).
+
+    d is saturated at -32 (exp(-32) ~ 2**-46 underflows the 14-bit output
+    anyway) — this keeps the int32 product in range for any input pair,
+    exactly like the input saturation stage of the hardware unit.
+    """
+    d = jnp.maximum(d.astype(I32), I32(-32) << in_frac)
+    return (d * I32(LOG2E_Q)) >> (in_frac + _LOG2E_FRAC - T_FRAC)
+
+
+def _exp2_int(t):
+    """2**t for t <= 0 at scale 2**-T_FRAC -> result at scale 2**-EXP_FRAC.
+
+    Split t = u + v, u = floor(t) (arithmetic shift), v in [0,1):
+    2**u is a right shift of the PWL 2**v value.
+    """
+    u = t >> T_FRAC                                   # floor (t<=0 -> u<=0)
+    v = t - (u << T_FRAC)                             # in [0, 2**T_FRAC)
+    p = exp2_frac_int(v)                              # [1,2) @ 2**-EXP_FRAC
+    return sat_rshift(p, -u)
+
+
+def _log2_int(s, s_frac: int):
+    """log2 of s (int > 0 at scale 2**-s_frac) at scale 2**-T_FRAC."""
+    e_pos = floor_log2(s)
+    frac = mantissa_frac(s, e_pos, T_FRAC)
+    log2m = log2_mant_int(frac)
+    return ((e_pos - s_frac) << T_FRAC) + log2m
+
+
+def softmax_int(x_fx, axis: int = -1, guard_shift: int | None = None):
+    """Normal mode: Eq. (10) over `axis`.  x_fx int32 @ S5.10.
+
+    Returns probabilities at scale 2**-EXP_FRAC (int32).
+    `guard_shift` down-shifts each exponent before the sum so that rows up
+    to 2**(16+guard_shift) elements cannot overflow the int32 accumulator.
+    """
+    n = x_fx.shape[axis]
+    if guard_shift is None:
+        guard_shift = max(0, n.bit_length() - 16)
+    m = jnp.max(x_fx, axis=axis, keepdims=True)
+    t = _to_log2_domain(x_fx - m, IN_FRAC)            # <= 0
+    e = _exp2_int(t)                                  # @ 2**-EXP_FRAC
+    s = jnp.sum(e >> guard_shift, axis=axis, keepdims=True)
+    s = jnp.maximum(s, 1)                             # log(0) guard
+    log2s = _log2_int(s, EXP_FRAC - guard_shift)      # @ 2**-T_FRAC
+    w = t - log2s                                     # log2 of prob, <= ~0
+    return _exp2_int(jnp.minimum(w, 0))
+
+
+def _pair_softmax_first_int(k_fx, k_frac: int):
+    """softmax_1^2([k, -k]) through the shared exp/log datapath.
+
+    k_fx int32 at scale 2**-k_frac.  Returns sigma(2k) @ 2**-EXP_FRAC.
+    This is the GELU-mode inner loop: max = |k| (the pairwise max-tree tap),
+    two exponents, the pair adder-tree tap, one pair log unit, one exp.
+    """
+    amax = jnp.abs(k_fx)
+    t1 = _to_log2_domain(k_fx - amax, k_frac)
+    t2 = _to_log2_domain(-k_fx - amax, k_frac)
+    e1 = _exp2_int(t1)
+    e2 = _exp2_int(t2)
+    s = jnp.maximum(e1 + e2, 1)                       # in (2**14, 2**15]
+    log2s = _log2_int(s, EXP_FRAC)
+    w = jnp.minimum(t1 - log2s, 0)
+    return _exp2_int(w)
+
+
+def gelu_k_float(z):
+    """Float k-datapath: k = sqrt(2/pi) * (z + 0.044715 z^3)."""
+    return math.sqrt(2.0 / math.pi) * (z + 0.044715 * z * z * z)
+
+
+def gelu_k_int(z_fx):
+    """k = sqrt(2/pi) * (z + 0.044715 z^3) in S5.10 -> int32 @ 2**-IN_FRAC.
+
+    The cubic-path input is saturated at |z| <= 8 (k(8) = 24.6 already
+    drives sigma(2k) to exactly 0/1 in 14-bit arithmetic), which bounds
+    every int32 intermediate — the hardware's input saturation stage.
+    """
+    z = jnp.clip(z_fx.astype(I32), I32(-8) << IN_FRAC, I32(8) << IN_FRAC)
+    z2 = (z * z) >> IN_FRAC
+    z3 = (z2 * z) >> IN_FRAC
+    az3 = (z3 * I32(GELU_A_Q)) >> 16
+    return ((z + az3) * I32(GELU_C_Q)) >> 14
+
+
+def gelu_int(z_fx):
+    """GELU mode (Eq. 8): z * softmax_1^2([k, -k]).  S5.10 -> S5.10."""
+    k = gelu_k_int(z_fx)
+    sig = _pair_softmax_first_int(k, IN_FRAC)          # @ 2**-EXP_FRAC
+    return (z_fx.astype(I32) * sig) >> EXP_FRAC
+
+
+def silu_int(z_fx):
+    """Exact-identity SiLU mode: z * softmax_1^2([z/2, -z/2]).
+
+    k = z/2 is represented losslessly by reinterpreting z at scale
+    2**-(IN_FRAC+1) — zero extra datapath.
+    """
+    sig = _pair_softmax_first_int(z_fx.astype(I32), IN_FRAC + 1)
+    return (z_fx.astype(I32) * sig) >> EXP_FRAC
+
+
+# --- float wrappers (quantize -> int unit -> dequantize) --------------------
+def softmax_dualmode(x, axis: int = -1):
+    """float in/out softmax through the bit-accurate unit (normal mode)."""
+    return dequantize(softmax_int(quantize(x), axis=axis), EXP_FRAC)
+
+
+def gelu_dualmode(z):
+    """float in/out GELU through the bit-accurate unit (GELU mode)."""
+    return dequantize(gelu_int(quantize(z)), IN_FRAC)
+
+
+def silu_dualmode(z):
+    """float in/out SiLU through the bit-accurate unit (SiLU mode)."""
+    return dequantize(silu_int(quantize(z)), IN_FRAC)

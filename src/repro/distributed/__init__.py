@@ -1,0 +1,2 @@
+from .sharding import (batch_pspec, cache_pspecs, data_axes, logits_pspec,
+                       named, param_pspecs, spec_tree_summary)

@@ -1,0 +1,272 @@
+"""Sharding rules: every parameter / input / cache leaf -> PartitionSpec.
+
+Axis conventions (DESIGN.md §5):
+  'pod'   second-level data parallelism (multi-pod mesh only)
+  'data'  data parallelism; FSDP shards params over it; SP shards long
+          sequences over it when the batch is too small to split
+  'model' tensor parallelism: attention heads, FFN hidden, vocab, and MoE
+          experts (expert parallelism when n_experts divides |model|)
+
+Rules are *path-based* over the raw pytrees that ``models/transformer.py``
+produces — no module wrappers, so the same rules serve every architecture
+(dense / MoE / MLA / mamba / rwkv / enc-dec / VLM).  Stacked-period params
+(leading ``n_periods`` axis from the scan-over-periods stack) get a leading
+dim that is None by default or 'data' under FSDP (ZeRO-3-style: each data
+rank holds a slice of the layer stack, all-gathered by GSPMD per period).
+
+Every axis is applied *guarded*: if the dim is not divisible by the mesh
+axis size, the dim stays replicated (GSPMD would pad, but silent padding
+wastes memory at 512 devices — explicit is better).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = dict[str, Any]
+
+# 2D weights whose OUTPUT dim is model-sharded (column parallel)
+_COL = {"wq", "wk", "wv", "wg", "up", "gate", "in_proj", "dt_proj",
+        "wq_b", "wkv_b", "w_lora2"}
+# 2D weights whose INPUT dim is model-sharded (row parallel)
+_ROW = {"wo", "down", "out_proj", "x_proj"}
+# replicated small projections (low-rank a-matrices, routers, ddlerp loras)
+_REPL = {"wq_a", "wkv_a", "w_lora1", "dd_w1", "router", "wr", "q_norm",
+         "kv_norm", "qn", "kn", "norm1", "norm2", "cross_norm", "final_norm",
+         "norm", "cross_gate", "mu", "mu_k", "mu_r", "ln_g", "ln_b",
+         "w_base", "pos"}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of this mesh (('pod','data') or ('data',))."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis(mesh: Mesh, name: str, dim: int):
+    """`name` if it shards `dim` evenly on this mesh, else None."""
+    if name not in mesh.axis_names:
+        return None
+    if isinstance(name, tuple):
+        size = int(np.prod([mesh.shape[a] for a in name]))
+    else:
+        size = mesh.shape[name]
+    return name if dim % size == 0 else None
+
+
+def _dp_axis(mesh: Mesh, dim: int):
+    """Full data-parallel axis group if it divides `dim`, else fallbacks."""
+    dp = data_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in dp]))
+    if dp and dim % size == 0:
+        return dp if len(dp) > 1 else dp[0]
+    if "data" in dp and dim % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return names
+
+
+def _base_spec(names: list[str], shape: tuple[int, ...], mesh: Mesh,
+               n_extra: int) -> P:
+    """Spec for the *logical* (unstacked) weight dims shape[n_extra:]."""
+    lname = names[-1]
+    dims = shape[n_extra:]
+    mdl = lambda d: _axis(mesh, "model", d)
+    in_ffn = "ffn" in names
+
+    # --- embeddings -------------------------------------------------------
+    if lname == "embed":                       # (V, d) vocab-TP
+        return P(mdl(dims[0]), None)
+    if lname in _REPL:
+        return P(*([None] * len(dims)))
+
+    # --- MoE stacked expert weights (E, d_in, d_out) -----------------------
+    if in_ffn and lname in ("gate", "up", "down") and len(dims) == 3:
+        n_elems = dims[0] * dims[1] * dims[2]
+        # small stacks (granite: 38M elems) REPLICATE and the dispatch
+        # runs batch-DP over the whole mesh (models/moe.py) — TP'ing a
+        # 512-wide expert ffn into 32-wide shards cost a 3.2 GB
+        # all-reduce per layer, and GSPMD's sharded-scatter fallback on
+        # EP buffers cost 1.27 TB/step (94% of granite's collectives)
+        if n_elems <= (1 << 27):
+            return P(None, None, None)
+        e = _axis(mesh, "model", dims[0])
+        if e is not None:                      # expert parallelism
+            return P(e, None, None)
+        return P(None, None, None)             # uneven EP: replicate
+
+    # --- rwkv channel-mix: wk is (d, ff) col, wv is (ff, d) row ------------
+    if in_ffn and lname == "wk" and len(dims) == 2:
+        return P(None, mdl(dims[1]))
+    if in_ffn and lname == "wv" and len(dims) == 2:
+        return P(mdl(dims[0]), None)
+
+    if lname in _COL and len(dims) == 2:
+        return P(None, mdl(dims[1]))
+    if lname in _ROW and len(dims) == 2:
+        return P(mdl(dims[0]), None)
+
+    # 1D biases / gains attached to a model-sharded output (conv_b, D, b of
+    # col-parallel linears); `b` of row-parallel outputs stays replicated.
+    if lname == "b" and len(dims) == 1:
+        parent = names[-2] if len(names) >= 2 else ""
+        if parent in _COL:
+            return P(mdl(dims[0]))
+        return P(None)
+    if lname == "w" and len(dims) == 2:        # nested {'w':...} linears
+        parent = names[-2] if len(names) >= 2 else ""
+        return _base_spec(names[:-1], shape, mesh, n_extra)
+    if lname in ("conv_b", "D", "dt_b") and len(dims) == 1:
+        return P(mdl(dims[0]))
+    if lname == "conv_w":                      # (d_conv, d_inner)
+        return P(None, mdl(dims[1]))
+    if lname == "A_log":                       # (d_inner, d_state)
+        return P(mdl(dims[0]), None)
+    if lname == "u":                           # rwkv (H, hd)
+        return P(mdl(dims[0]), None)
+    if lname == "dd_w2":                       # (5, r, d)
+        return P(None, None, mdl(dims[2]))
+    if lname == "lm_head":
+        return P(None, mdl(dims[1]))
+    # default: replicate
+    return P(*([None] * len(dims)))
+
+
+def _fsdp_wrap(spec: P, shape, mesh: Mesh, stacked: bool) -> P:
+    """ZeRO-style extra sharding over 'data' on the largest free dim."""
+    dsize = mesh.shape["data"]
+    parts = list(spec)
+    # prefer the stacked-period axis, then the largest unsharded dim
+    order = sorted(range(len(parts)),
+                   key=lambda i: (-int(i == 0 and stacked), -shape[i]))
+    for i in order:
+        if parts[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+            parts[i] = "data"
+            break
+    return P(*parts)
+
+
+def param_pspecs(params: Params, mesh: Mesh, fsdp: bool = False,
+                 profile: str = "tp") -> Params:
+    """PartitionSpec tree matching a param tree from ``init_lm`` (or its
+    eval_shape).  Works on ShapeDtypeStructs — no device data touched.
+
+    profile='tp'  tensor/expert parallelism over 'model' (+FSDP option)
+    profile='dp'  small-model profile: weights REPLICATED (FSDP still
+                  shards them over 'data' if requested) — at <2B params
+                  TP shards are too thin and collectives dominate."""
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        # stacked-period / stacked-encoder params carry one leading dim
+        stacked = ("periods" in names or "blocks" in names)
+        n_extra = 1 if stacked else 0
+        if len(shape) == 0:
+            return P()
+        if profile == "dp":
+            spec = P(*([None] * len(shape)))
+        else:
+            base = _base_spec(names, shape, mesh, n_extra)
+            spec = P(*([None] * n_extra + list(base)))
+            # pad/trim to rank (defensive)
+            parts = (list(spec) + [None] * len(shape))[: len(shape)]
+            spec = P(*parts)
+        if fsdp and int(np.prod(shape)) >= (1 << 16):
+            spec = _fsdp_wrap(spec, shape, mesh, stacked)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_pspec(mesh: Mesh, global_batch: int,
+                include_model: bool = False) -> P:
+    """Spec for a (B, ...) batch leaf — DP over pod×data when divisible;
+    with include_model (dp profile) the idle 'model' axis joins the DP
+    group when the batch allows."""
+    if include_model and "model" in mesh.axis_names:
+        pool = data_axes(mesh) + ("model",)
+        size = int(np.prod([mesh.shape[a] for a in pool]))
+        if global_batch % size == 0:
+            return P(pool)
+    return P(_dp_axis(mesh, global_batch))
+
+
+def logits_pspec(mesh: Mesh, global_batch: int, vocab: int) -> P:
+    return P(_dp_axis(mesh, global_batch), None, _axis(mesh, "model", vocab))
+
+
+def cache_pspecs(caches: Params, mesh: Mesh, global_batch: int) -> Params:
+    """Specs for KV/state cache trees (from ``init_caches`` eval_shape).
+
+    Batch shards over DP when divisible.  When it is not (long_500k B=1),
+    the *sequence* dim of KV caches shards over 'data' instead — sequence
+    parallelism; attention contractions over the seq dim become GSPMD
+    reduce-scatters.  Head / channel dims shard over 'model'.
+    """
+    dp = _dp_axis(mesh, global_batch)
+    seq_sp = dp is None          # SP fallback for unshardable batch
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        stacked = "periods" in names
+        n_extra = 1 if stacked else 0
+        dims = shape[n_extra:]
+        lname = names[-1]
+        lead = [None] * n_extra
+        mdl = lambda d: _axis(mesh, "model", d)
+        sq = (lambda d: _axis(mesh, "data", d)) if seq_sp else (lambda d: None)
+        if lname in ("k", "v") and len(dims) == 4:      # (B,S,K,hd)
+            kh = mdl(dims[2])
+            # kv heads rarely divide a 16-wide axis (GQA: 4-8 heads) —
+            # fall back to sharding head_dim, else the 32k-deep caches
+            # replicate over 'model' (measured 40 GB/chip at qwen3 decode)
+            hd = None if kh else mdl(dims[3])
+            return P(*lead, dp, sq(dims[1]), kh, hd)
+        if lname == "ckv" and len(dims) == 3:           # (B,S,r) MLA latent
+            return P(*lead, dp, sq(dims[1]), None)
+        if lname == "krope" and len(dims) == 3:
+            return P(*lead, dp, sq(dims[1]), None)
+        if lname == "conv" and len(dims) == 3:          # (B,w,di)
+            return P(*lead, dp, None, mdl(dims[2]))
+        if lname == "ssm" and len(dims) == 3:           # (B,di,ds)
+            return P(*lead, dp, mdl(dims[1]), None)
+        if lname == "wkv" and len(dims) == 4:           # (B,H,hd,hd)
+            return P(*lead, dp, mdl(dims[1]), None, None)
+        if lname in ("tm_x", "cm_x") and len(dims) == 2:
+            return P(*lead, dp, None)
+        # cross_kv k/v handled above; default: batch-shard only
+        return P(*lead, dp, *([None] * (len(dims) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, caches)
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_tree_summary(specs: Params, shapes: Params) -> str:
+    """Human-readable (path, shape, spec) listing — debugging / docs."""
+    lines = []
+
+    def visit(path, spec):
+        lines.append(f"{'/'.join(_path_names(path)):60s} {spec}")
+
+    jax.tree_util.tree_map_with_path(visit, specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    return "\n".join(lines)

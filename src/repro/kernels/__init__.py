@@ -1,0 +1,2 @@
+"""Pallas kernels for the dual-mode softmax/GELU unit (+ oracles)."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""Beyond-paper Pallas kernel: gated-FFN matmul with the GELU-via-softmax
+epilogue fused in VMEM.
+
+    Y = act(X @ Wg) * (X @ Wu)
+
+where `act` is the paper's Eq. 8 evaluated in the unit's own log-domain
+float form (exp as 2^u·2^v).  The unfused graph writes the (tokens, d_ff)
+gate activations to HBM and reads them back for the elementwise multiply;
+fusing the epilogue into the matmul tile keeps them VMEM-resident — at
+qwen3-14b train_4k that round trip is 2·tokens·d_ff·2B = 146 GB/step of
+HBM traffic (≈0.18 s at 819 GB/s), removed entirely.
+
+Tiling: grid over (M/bm, F/bf) output tiles; K (= d_model) kept whole per
+tile — X tile (bm, K) + two weight tiles (K, bf) fit VMEM for every
+assigned arch (K ≤ 5120: 3 × 128·5120·4B ≈ 7.9 MB < 16 MB v5e VMEM).
+MXU alignment: bm, bf multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LOG2E = 1.4426950408889634
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _epilogue(g, mode: str):
+    """The unit's GELU-mode arithmetic (float lanes), on a VMEM tile."""
+    if mode == "gelu":
+        k = _SQRT_2_OVER_PI * (g + 0.044715 * g * g * g)
+    else:                                    # exact SiLU identity
+        k = 0.5 * g
+    amax = jnp.abs(k)
+    t1 = (k - amax) * _LOG2E
+    t2 = (-k - amax) * _LOG2E
+    sig = jnp.exp2(t1 - jnp.log2(jnp.exp2(t1) + jnp.exp2(t2)))
+    return g * sig
+
+
+def _ffn_body(x_ref, wg_ref, wu_ref, o_ref, *, mode: str):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (_epilogue(g, mode) * u).astype(o_ref.dtype)
+
+
+def _pick(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "interpret", "bm", "bf"))
+def fused_glu_pallas(x, wg, wu, *, mode: str = "silu",
+                     interpret: bool = False, bm: int = 128, bf: int = 512):
+    """x (M,K) @ wg/wu (K,F) with fused activation epilogue -> (M,F)."""
+    m, k = x.shape
+    f = wg.shape[1]
+    bm = _pick(m, bm)
+    bf = _pick(f, bf)
+    return pl.pallas_call(
+        functools.partial(_ffn_body, mode=mode),
+        grid=(m // bm, f // bf),
+        in_specs=[pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                  pl.BlockSpec((k, bf), lambda i, j: (0, j)),
+                  pl.BlockSpec((k, bf), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, f), x.dtype),
+        interpret=interpret,
+    )(x, wg, wu)

@@ -1,0 +1,118 @@
+"""Public jit'd ops over the dual-mode softmax kernels.
+
+These are what the model code calls.  They
+  * reshape arbitrary-rank inputs to the kernel's 2D layout,
+  * pad rows/cols to kernel-friendly sizes when needed,
+  * attach custom VJPs (quantized forward, float surrogate backward — the
+    straight-through estimator, so the quantized unit is a trainable
+    drop-in), and
+  * fall back to the bit-exact jnp path on hosts where Pallas interpret
+    would be too slow for full-model shapes (``use_kernel=False``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softmax_unit as unit
+from repro.core.activations import gelu_tanh, silu as silu_float
+from . import dualmode_softmax as dk
+
+
+def _as_2d(x):
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+def _pad_cols(x2, multiple=128, value=0.0):
+    n = x2.shape[-1]
+    pad = (-n) % multiple
+    if pad:
+        x2 = jnp.pad(x2, ((0, 0), (0, pad)), constant_values=value)
+    return x2, pad
+
+
+# ---------------- softmax (normal mode) ----------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def softmax(x, precision: str = "int", use_kernel: bool = True,
+            interpret: bool = True):
+    """Softmax over the last axis through the dual-mode unit."""
+    return _softmax_fwd_impl(x, precision, use_kernel, interpret)
+
+
+def _softmax_fwd_impl(x, precision, use_kernel, interpret):
+    if not use_kernel:
+        return unit.softmax_dualmode(x, axis=-1).astype(x.dtype)
+    x2, shape = _as_2d(x)
+    x2p, pad = _pad_cols(x2, 128, value=-30.0)   # pad with ~-inf in S5.10
+    y = dk.softmax_pallas(x2p, precision=precision, interpret=interpret)
+    if pad:
+        y = y[:, : shape[-1]]
+    return y.reshape(shape)
+
+
+def _softmax_fwd(x, precision, use_kernel, interpret):
+    y = _softmax_fwd_impl(x, precision, use_kernel, interpret)
+    return y, y
+
+
+def _softmax_bwd(precision, use_kernel, interpret, y, g):
+    # standard softmax VJP evaluated at the unit's own output
+    dot = jnp.sum(g * y, axis=-1, keepdims=True)
+    return (y * (g - dot),)
+
+
+softmax.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+# ---------------- GELU / SiLU (GELU mode) ----------------
+
+def _pair_act_fwd_impl(z, mode, precision, use_kernel, interpret):
+    if not use_kernel:
+        f = unit.gelu_dualmode if mode == "gelu" else unit.silu_dualmode
+        return f(z).astype(z.dtype)
+    z2, shape = _as_2d(z)
+    z2p, pad = _pad_cols(z2, 128)
+    y = dk.pair_act_pallas(z2p, mode=mode, precision=precision,
+                           interpret=interpret)
+    if pad:
+        y = y[:, : shape[-1]]
+    return y.reshape(shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def gelu(z, precision: str = "int", use_kernel: bool = True,
+         interpret: bool = True):
+    """GELU through the unit's GELU mode (Eq. 8)."""
+    return _pair_act_fwd_impl(z, "gelu", precision, use_kernel, interpret)
+
+
+def _gelu_fwd(z, precision, use_kernel, interpret):
+    return gelu(z, precision, use_kernel, interpret), z
+
+
+def _gelu_bwd(precision, use_kernel, interpret, z, g):
+    return (g * jax.grad(lambda t: gelu_tanh(t).sum())(z),)
+
+
+gelu.defvjp(_gelu_fwd, _gelu_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def silu(z, precision: str = "int", use_kernel: bool = True,
+         interpret: bool = True):
+    """SiLU through the unit's GELU mode (exact identity, beyond-paper)."""
+    return _pair_act_fwd_impl(z, "silu", precision, use_kernel, interpret)
+
+
+def _silu_fwd(z, precision, use_kernel, interpret):
+    return silu(z, precision, use_kernel, interpret), z
+
+
+def _silu_bwd(precision, use_kernel, interpret, z, g):
+    return (g * jax.grad(lambda t: silu_float(t).sum())(z),)
+
+
+silu.defvjp(_silu_fwd, _silu_bwd)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Two tiers per kernel:
+  *_bitexact : the same int32 algorithm in plain jnp (repro.core) — kernels
+               in precision='int' must match these EXACTLY (atol=0).
+  *_exact    : textbook float math — kernels must match within the unit's
+               approximation error (documented bounds, cf. paper Table I).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softmax_unit as unit
+from repro.core.activations import gelu_exact, gelu_tanh, silu
+
+
+# bit-exact oracles (same arithmetic, no pallas)
+def softmax_bitexact(x):
+    return unit.softmax_dualmode(x.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+
+def gelu_bitexact(z):
+    return unit.gelu_dualmode(z.astype(jnp.float32)).astype(z.dtype)
+
+
+def silu_bitexact(z):
+    return unit.silu_dualmode(z.astype(jnp.float32)).astype(z.dtype)
+
+
+# float-exact oracles
+def softmax_exact(x):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+
+def fused_glu_ref(x, wg, wu, mode: str = "silu"):
+    """Oracle for kernels/fused_ffn.py: unfused matmuls + float activation."""
+    g = (x.astype(jnp.float32) @ wg.astype(jnp.float32))
+    u = (x.astype(jnp.float32) @ wu.astype(jnp.float32))
+    act = gelu_tanh(g) if mode == "gelu" else silu(g)
+    return (act * u).astype(x.dtype)
+
+
+def gelu_exact_ref(z):
+    return gelu_exact(z.astype(jnp.float32)).astype(z.dtype)
+
+
+def gelu_tanh_ref(z):
+    return gelu_tanh(z.astype(jnp.float32)).astype(z.dtype)
+
+
+def silu_exact_ref(z):
+    return silu(z.astype(jnp.float32)).astype(z.dtype)

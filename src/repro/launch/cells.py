@@ -1,0 +1,173 @@
+"""Cell builders: (arch x shape x mesh) -> the exact jit'd program +
+ShapeDtypeStruct args + shardings that the dry-run lowers and the real
+launchers execute.  One code path for both — the dry-run proves what
+train.py/serve.py would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import (ModelConfig, SHAPES, ShapeCell, TrainConfig)
+from repro.distributed import (batch_pspec, cache_pspecs, data_axes,
+                               param_pspecs)
+from repro.models.accounting import (analytic_model_flops, count_params,
+                                     pick_profile)
+from repro.models.transformer import (encoder_apply, init_caches, init_lm,
+                                      lm_apply)
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step, state_pspecs
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple[int, ...]
+    cfg: ModelConfig
+    cell: ShapeCell
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        return self.jit().lower(*self.args)
+
+    def resident_bytes_per_chip(self) -> float:
+        """Exact per-chip bytes of the program's RESIDENT state (params,
+        optimizer, caches, batch) from the declared shardings — the
+        hardware-true memory floor, independent of XLA-CPU buffer-
+        assignment artifacts."""
+        total = 0.0
+
+        def add(leaf, sh):
+            nonlocal total
+            if not hasattr(leaf, "shape"):
+                return
+            shape = (sh.shard_shape(leaf.shape)
+                     if hasattr(sh, "shard_shape") else leaf.shape)
+            n = 1
+            for d in shape:
+                n *= d
+            total += n * leaf.dtype.itemsize
+
+        for arg, sh in zip(self.args, self.in_shardings):
+            if isinstance(sh, NamedSharding):
+                jax.tree.map(lambda l: add(l, sh), arg)
+            else:
+                jax.tree.map(add, arg, sh)
+        return total
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def default_train_cfg() -> TrainConfig:
+    """Dry-run / launcher training defaults: remat + SP on; FSDP off —
+    under SP the weights are gathered per use anyway (ZeRO-3 pattern), so
+    FSDP only added a second gather path (§Perf qwen3 iteration D: t_n
+    8.58 -> 6.57 s).  TP + ZeRO-1-style opt sharding keeps residency
+    under 16 GiB for every assigned arch."""
+    return TrainConfig(remat=True, fsdp=False)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh, *,
+               dtype=jnp.bfloat16, tcfg: TrainConfig | None = None) -> Cell:
+    cfg = registry.get_config(arch_id)
+    cell = SHAPES[shape_name]
+    ok, why = registry.cell_applicable(cfg, cell)
+    if not ok:
+        raise ValueError(f"{arch_id} x {shape_name}: {why}")
+    b, s = cell.global_batch, cell.seq_len
+    profile = pick_profile(cfg)
+    dp = batch_pspec(mesh, b, include_model=(profile == "dp"))
+    sds = jax.ShapeDtypeStruct
+
+    if cell.kind == "train":
+        tcfg = tcfg or default_train_cfg()
+        state_sds, state_spec = state_pspecs(cfg, tcfg, mesh, dtype)
+        batch_sds = registry.input_specs(cfg, cell, dtype)
+        batch_spec = {k: P(*([dp[0]] + [None] * (len(v.shape) - 1)))
+                      for k, v in batch_sds.items()}
+        fn = make_train_step(cfg, tcfg, mesh)
+        return Cell(arch_id, shape_name, "train", fn,
+                    (state_sds, batch_sds),
+                    (_named(mesh, state_spec), _named(mesh, batch_spec)),
+                    (_named(mesh, state_spec), None), (0,), cfg, cell)
+
+    # serving cells share params/caches construction; small models serve
+    # with replicated weights ('dp' profile) — no per-layer TP collectives
+    p_sds = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg, dtype))
+    p_spec = param_pspecs(p_sds, mesh, fsdp=False, profile=profile)
+    c_sds = jax.eval_shape(lambda: init_caches(cfg, b, s, dtype))
+    c_spec = cache_pspecs(c_sds, mesh, b)
+    # residual-stream pin for serving: batch over dp.  Under the 'dp'
+    # profile the 'model' axis would otherwise sit idle and every rank
+    # duplicates the compute (measured 16x flops bloat on whisper
+    # prefill) — prefill puts it to work as sequence parallelism.
+    sp_ax = None
+    dp_has_model = isinstance(dp[0], tuple) and "model" in dp[0]
+    if (cell.kind == "prefill" and profile == "dp" and not dp_has_model
+            and "model" in mesh.axis_names
+            and s % mesh.shape["model"] == 0):
+        sp_ax = "model"
+    act_pspec = (P(dp[0], sp_ax, None) if (dp[0] is not None or sp_ax)
+                 else None)
+
+    if cell.kind == "prefill":
+        pf = make_prefill_step(cfg, act_pspec)
+        toks = sds((b, s), jnp.int32)
+        last = sds((b,), jnp.int32)
+        args = [p_sds, c_sds, toks, last]
+        specs = [p_spec, c_spec, P(dp[0], None), P(dp[0])]
+        if cfg.family == "encdec":
+            def fn(params, caches, tokens, last_idx, frames):
+                enc = encoder_apply(params, cfg, frames)
+                return pf(params, caches, tokens, last_idx, enc)
+            args.append(sds((b, cfg.n_frames, cfg.d_model), dtype))
+            specs.append(P(dp[0], None, None))
+        elif cfg.family == "vlm":
+            def fn(params, caches, tokens, last_idx, img):
+                return pf(params, caches, tokens, last_idx, img)
+            args.append(sds((b, cfg.n_img_tokens, cfg.d_model), dtype))
+            specs.append(P(dp[0], None, None))
+        else:
+            def fn(params, caches, tokens, last_idx):
+                return pf(params, caches, tokens, last_idx, None)
+        return Cell(arch_id, shape_name, "prefill", fn, tuple(args),
+                    tuple(_named(mesh, sp) for sp in specs),
+                    (None, _named(mesh, c_spec)), (1,), cfg, cell)
+
+    # decode: one new token against a seq_len-deep cache
+    dc = make_decode_step(cfg, act_pspec)
+    toks = sds((b, 1), jnp.int32)
+    pos = sds((b,), jnp.int32)
+    return Cell(arch_id, shape_name, "decode", dc,
+                (p_sds, c_sds, toks, pos),
+                (_named(mesh, p_spec), _named(mesh, c_spec),
+                 _named(mesh, P(dp[0], None)), _named(mesh, P(dp[0]))),
+                (None, _named(mesh, c_spec)), (1,), cfg, cell)
+
+
+def applicable_cells(arch_id: str) -> list[str]:
+    cfg = registry.get_config(arch_id)
+    return [name for name, cell in SHAPES.items()
+            if registry.cell_applicable(cfg, cell)[0]]
+
+
+# count_params / analytic_model_flops moved to repro.models.accounting
+# (re-exported above for benchmark/back-compat callers).

@@ -1,0 +1,70 @@
+"""Analytic parameter / flop accounting (shared by launch, train, bench)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeCell
+from .transformer import init_lm
+
+
+def count_params(cfg: ModelConfig) -> dict[str, float]:
+    """Analytic param counts from the init tree (no allocation).
+
+    n_matmul: params that participate in matmuls (excl. embed/pos gathers,
+              incl. the tied head once as a matmul operand)
+    n_active: n_matmul with routed-expert stacks scaled to top_k experts
+    """
+    p_sds = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    n_total = n_matmul = n_active = 0.0
+
+    def visit(path, leaf):
+        nonlocal n_total, n_matmul, n_active
+        names = [str(getattr(e, "key", getattr(e, "idx", ""))) for e in path]
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        n_total += n
+        if leaf.ndim < 2 or names[-1] in ("embed", "pos"):
+            return
+        n_matmul += n
+        moe = cfg.moe
+        stack_sizes = {moe.n_experts, moe.ep_pad} if moe else set()
+        # expert dim is leaf dim 0, or dim 1 under the stacked-period axis
+        e_dim = next((d for d in leaf.shape[:2] if d in stack_sizes), None)
+        if (moe and "ffn" in names and names[-1] in ("gate", "up", "down")
+                and leaf.ndim >= 3 and e_dim):
+            # top_k live experts out of the (possibly padded) stack
+            n_active += n * (moe.top_k / e_dim)
+        else:
+            n_active += n
+
+    jax.tree_util.tree_map_with_path(visit, p_sds)
+    if cfg.tie_embeddings:           # tied head IS a matmul operand
+        n_matmul += cfg.vocab * cfg.d_model
+        n_active += cfg.vocab * cfg.d_model
+    return {"n_total": n_total, "n_matmul": n_matmul, "n_active": n_active}
+
+
+def analytic_model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """GLOBAL 'useful' flops per step: 6·N_active·D train / 2·N_active·D
+    inference (D = tokens this step).  Attention's quadratic term is
+    deliberately excluded — the MODEL_FLOPS/HLO_FLOPs ratio then exposes
+    both remat recompute AND quadratic-attention overhead."""
+    n = count_params(cfg)["n_active"]
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch          # decode: one token/row
+
+
+# params below this replicate rather than TP: at 0.1-2B the tensor-
+# parallel shards are too thin (d/16 < 512) and every step drowns in
+# layer-wise all-gathers — measured 12-30x collective overhead on
+# qwen1.5-0.5b / whisper-base (EXPERIMENTS.md §Perf).
+DP_PROFILE_MAX_PARAMS = 1.7e9
+
+
+def pick_profile(cfg: ModelConfig) -> str:
+    return "dp" if count_params(cfg)["n_total"] <= DP_PROFILE_MAX_PARAMS \
+        else "tp"

@@ -1,0 +1,257 @@
+"""Attention variants: GQA/MHA (qk-norm, qkv-bias), MLA, cross-attention.
+
+All variants share one scores->softmax->combine core so the attention
+softmax goes through the configured implementation (float or the paper's
+dual-mode unit).  KV caches are explicit pytrees so the serving engine and
+the scan-over-layers stack can thread them.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention, use_flash
+from .layers import (Params, apply_rope, linear, linear_init, rmsnorm,
+                     rmsnorm_init, softmax_fn)
+
+
+class AttnSpec(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    softmax_impl: str = "float"
+    causal: bool = True
+    use_rope: bool = True     # Jamba attends without positional encoding
+
+
+class MLASpec(NamedTuple):
+    d_model: int
+    n_heads: int
+    q_lora_rank: int      # 0 = full-rank q projection
+    kv_lora_rank: int
+    nope_dim: int
+    rope_dim: int
+    v_dim: int
+    rope_theta: float = 10000.0
+    softmax_impl: str = "float"
+
+
+# ---------------- shared core ----------------
+
+def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
+          scale: float | None = None):
+    """q: (B,S,K,G,h)  k/v: (B,T,K,hk)/(B,T,K,hv)  q_pos: (B,S)
+    kv_valid: (B,T) bool.
+
+    Returns (B,S,K,G,hv).  Causality: kv position t attends iff
+    kv_valid[t] and (not causal or t_pos <= q_pos).  kv positions are
+    their cache indices (prefill writes at [0..S), decode appends).
+
+    Dispatch: when the (S,T) score tile is too large to materialize the
+    blocked online-softmax path streams KV (models/flash.py) — same
+    log-domain arithmetic as the paper's unit, in streaming form.  The
+    bit-accurate dual-mode unit needs whole score rows, so softmax_impl=
+    'dualmode' applies on the naive path (short T: decode steps, encoder
+    blocks) and falls back to the float log-domain form when blocked.
+    """
+    b, s_q, t = q.shape[0], q.shape[1], k.shape[1]
+    if use_flash(s_q, t):
+        return flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                               causal=causal, scale=scale)
+    scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    t_pos = jnp.arange(t)[None, :]                          # (1,T) cache idx
+    mask = kv_valid[:, None, :]                             # (B,1,T)
+    if causal:
+        mask = mask & (t_pos[:, None, :] <= q_pos[:, :, None])  # (B,S,T)
+    else:
+        mask = jnp.broadcast_to(mask, (b, s_q, t))
+    scores = jnp.where(mask[:, None, None, :, :], scores, -30.0)
+    probs = softmax_fn(softmax_impl)(scores).astype(v.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+def _write_seq(buf, new, pos):
+    """Write `new` (B,S,...) into `buf` (B,Smax,...) at offset `pos`.
+
+    pos may be a scalar (lockstep prefill/decode) or a (B,) vector
+    (continuous batching: every slot is at its own depth)."""
+    new = new.astype(buf.dtype)
+    if jnp.ndim(pos) == 0:
+        idx = (0, pos) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new, idx)
+    def row(b_, n_, p_):
+        return jax.lax.dynamic_update_slice(
+            b_, n_, (p_,) + (0,) * (b_.ndim - 1))
+    return jax.vmap(row)(buf, new, pos)
+
+
+def _kv_valid_mask(t: int, pos, sl: int, b: int):
+    """(B,T) validity: cache rows [0, pos+sl) hold data."""
+    t_idx = jnp.arange(t)[None, :]
+    end = (pos + sl if jnp.ndim(pos) == 0 else pos[:, None] + sl)
+    return jnp.broadcast_to(t_idx < end, (b, t))
+
+
+def _update_cache(cache, k_new, v_new, pos):
+    """Write (B,S,K,h) at sequence offset pos into (B,Smax,K,h) buffers."""
+    return {"k": _write_seq(cache["k"], k_new, pos),
+            "v": _write_seq(cache["v"], v_new, pos)}
+
+
+# ---------------- GQA ----------------
+
+def gqa_init(key, s: AttnSpec, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"wq": linear_init(ks[0], s.d_model, s.n_heads * s.head_dim, dtype,
+                           bias=s.qkv_bias),
+         "wk": linear_init(ks[1], s.d_model, s.n_kv_heads * s.head_dim, dtype,
+                           bias=s.qkv_bias),
+         "wv": linear_init(ks[2], s.d_model, s.n_kv_heads * s.head_dim, dtype,
+                           bias=s.qkv_bias),
+         "wo": linear_init(ks[3], s.n_heads * s.head_dim, s.d_model, dtype)}
+    if s.qk_norm:
+        p["qn"] = rmsnorm_init(s.head_dim, dtype)
+        p["kn"] = rmsnorm_init(s.head_dim, dtype)
+    return p
+
+
+def gqa_cache_init(s: AttnSpec, batch: int, max_seq: int, dtype) -> Params:
+    shape = (batch, max_seq, s.n_kv_heads, s.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_apply(p: Params, s: AttnSpec, x, *, positions, cache=None, pos=0):
+    """x: (B,S,d).  If cache given: write new kv at `pos`, attend over cache.
+    Returns (out, new_cache_or_None)."""
+    b, sl, _ = x.shape
+    g = s.n_heads // s.n_kv_heads
+    q = linear(p["wq"], x).reshape(b, sl, s.n_heads, s.head_dim)
+    k = linear(p["wk"], x).reshape(b, sl, s.n_kv_heads, s.head_dim)
+    v = linear(p["wv"], x).reshape(b, sl, s.n_kv_heads, s.head_dim)
+    if s.qk_norm:
+        q = rmsnorm(p["qn"], q)
+        k = rmsnorm(p["kn"], k)
+    if s.use_rope:
+        q = apply_rope(q, positions, s.rope_theta)
+        k = apply_rope(k, positions, s.rope_theta)
+    if cache is not None:
+        cache = _update_cache(cache, k, v, pos)
+        k_all, v_all = cache["k"], cache["v"]
+        kv_valid = _kv_valid_mask(k_all.shape[1], pos, sl, b)
+    else:
+        k_all, v_all = k, v
+        kv_valid = jnp.ones((b, sl), dtype=bool)
+    qg = q.reshape(b, sl, s.n_kv_heads, g, s.head_dim)
+    o = _sdpa(qg, k_all, v_all, q_pos=positions, kv_valid=kv_valid,
+              softmax_impl=s.softmax_impl, causal=s.causal)
+    o = o.reshape(b, sl, s.n_heads * s.head_dim)
+    return linear(p["wo"], o), cache
+
+
+# ---------------- MLA (DeepSeek-V2 / MiniCPM3 style) ----------------
+
+def mla_init(key, s: MLASpec, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    qk_head = s.nope_dim + s.rope_dim
+    p: Params = {}
+    if s.q_lora_rank:
+        p["wq_a"] = linear_init(ks[0], s.d_model, s.q_lora_rank, dtype)
+        p["q_norm"] = rmsnorm_init(s.q_lora_rank, dtype)
+        p["wq_b"] = linear_init(ks[1], s.q_lora_rank, s.n_heads * qk_head, dtype)
+    else:
+        p["wq"] = linear_init(ks[0], s.d_model, s.n_heads * qk_head, dtype)
+    p["wkv_a"] = linear_init(ks[2], s.d_model, s.kv_lora_rank + s.rope_dim, dtype)
+    p["kv_norm"] = rmsnorm_init(s.kv_lora_rank, dtype)
+    p["wkv_b"] = linear_init(ks[3], s.kv_lora_rank,
+                             s.n_heads * (s.nope_dim + s.v_dim), dtype)
+    p["wo"] = linear_init(ks[4], s.n_heads * s.v_dim, s.d_model, dtype)
+    return p
+
+
+def mla_cache_init(s: MLASpec, batch: int, max_seq: int, dtype) -> Params:
+    """MLA caches the *compressed* latent + shared rope key — the memory win."""
+    return {"ckv": jnp.zeros((batch, max_seq, s.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_seq, s.rope_dim), dtype)}
+
+
+def mla_apply(p: Params, s: MLASpec, x, *, positions, cache=None, pos=0):
+    b, sl, _ = x.shape
+    qk_head = s.nope_dim + s.rope_dim
+    if s.q_lora_rank:
+        q = linear(p["wq_b"], rmsnorm(p["q_norm"], linear(p["wq_a"], x)))
+    else:
+        q = linear(p["wq"], x)
+    q = q.reshape(b, sl, s.n_heads, qk_head)
+    q_nope, q_rope = q[..., : s.nope_dim], q[..., s.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, s.rope_theta)
+
+    kv_a = linear(p["wkv_a"], x)                       # (B,S,kv_lora+rope)
+    ckv = rmsnorm(p["kv_norm"], kv_a[..., : s.kv_lora_rank])
+    k_rope_new = apply_rope(kv_a[..., s.kv_lora_rank:][:, :, None, :],
+                            positions, s.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        ckv_all = _write_seq(cache["ckv"], ckv, pos)
+        krope_all = _write_seq(cache["krope"], k_rope_new, pos)
+        cache = {"ckv": ckv_all, "krope": krope_all}
+        t = ckv_all.shape[1]
+        kv_valid = _kv_valid_mask(t, pos, sl, b)
+    else:
+        ckv_all, krope_all = ckv, k_rope_new
+        t = sl
+        kv_valid = jnp.ones((b, sl), dtype=bool)
+
+    # expand latent -> per-head k_nope / v (naive MLA; absorbed form is a
+    # perf option, see EXPERIMENTS.md §Perf)
+    kv = linear(p["wkv_b"], ckv_all).reshape(b, t, s.n_heads,
+                                             s.nope_dim + s.v_dim)
+    k_nope, v = kv[..., : s.nope_dim], kv[..., s.nope_dim:]
+
+    # route through the shared core: concat rope/nope halves so MLA uses
+    # the same naive/flash dispatch as GQA (K=n_heads, G=1)
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1) \
+        .reshape(b, sl, s.n_heads, 1, qk_head)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_all[:, :, None, :],
+                                  (b, t, s.n_heads, s.rope_dim))], axis=-1)
+    o = _sdpa(q_cat, k_cat, v, q_pos=positions, kv_valid=kv_valid,
+              softmax_impl=s.softmax_impl, causal=True,
+              scale=1.0 / qk_head ** 0.5)
+    o = o.reshape(b, sl, s.n_heads * s.v_dim)
+    return linear(p["wo"], o), cache
+
+
+# ---------------- cross attention (VLM / enc-dec) ----------------
+
+def cross_init(key, s: AttnSpec, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {"wq": linear_init(ks[0], s.d_model, s.n_heads * s.head_dim, dtype),
+            "wk": linear_init(ks[1], s.d_model, s.n_kv_heads * s.head_dim, dtype),
+            "wv": linear_init(ks[2], s.d_model, s.n_kv_heads * s.head_dim, dtype),
+            "wo": linear_init(ks[3], s.n_heads * s.head_dim, s.d_model, dtype)}
+
+
+def cross_kv(p: Params, s: AttnSpec, enc):
+    """Precompute cross K/V from encoder states (prefill-time, cached)."""
+    b, t, _ = enc.shape
+    k = linear(p["wk"], enc).reshape(b, t, s.n_kv_heads, s.head_dim)
+    v = linear(p["wv"], enc).reshape(b, t, s.n_kv_heads, s.head_dim)
+    return {"k": k, "v": v}
+
+
+def cross_apply(p: Params, s: AttnSpec, x, kv: Params):
+    b, sl, _ = x.shape
+    g = s.n_heads // s.n_kv_heads
+    q = linear(p["wq"], x).reshape(b, sl, s.n_kv_heads, g, s.head_dim)
+    t = kv["k"].shape[1]
+    valid = jnp.ones((b, t), dtype=bool)
+    o = _sdpa(q, kv["k"], kv["v"], q_pos=jnp.zeros((b, sl), jnp.int32),
+              kv_valid=valid, softmax_impl=s.softmax_impl, causal=False)
+    return linear(p["wo"], o.reshape(b, sl, s.n_heads * s.head_dim))

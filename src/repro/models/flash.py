@@ -1,0 +1,77 @@
+"""Blocked online-softmax attention (flash attention, pure JAX).
+
+Why it exists: the naive path materializes (B,H,S,T) scores — at the
+assigned train_4k/prefill_32k shapes that is 10s of GB per chip and can
+never fit VMEM/HBM.  The blocked form streams KV in chunks and keeps only
+(B,H,S,block) live.
+
+Faithfulness note (DESIGN.md §2): the paper's softmax normalizes in the
+LOG domain (Eq. 10), y = 2^(t_i - m - log2 Σ 2^(t_j - m)).  That form
+telescopes exactly into the online-softmax recurrence (Milakov &
+Gimelshein [22], the same family the paper's adder-tree architecture
+cites): carrying (m, l) per row IS the streaming evaluation of Eq. 10.
+We therefore compute every exponential as exp2((s - m) * log2e) — the
+2^u·2^v decomposition the hardware unit uses — so the blocked path is the
+unit's own arithmetic, streamed.  (The bit-accurate int path needs whole
+rows and stays on the naive path used for short T.)
+
+Shapes: q (B,S,K,G,h), k (B,T,K,h), v (B,T,K,hv) -> out (B,S,K,G,hv).
+hv may differ from h (MLA).  Masking: kv position t attends iff
+kv_valid[b,t] and (not causal or t <= q_pos[b,s]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LOG2E = 1.4426950408889634
+_NEG = -1e30
+
+
+def flash_attention(q, k, v, *, q_pos, kv_valid, causal: bool = True,
+                    block: int = 1024, scale: float | None = None):
+    b, s_q, kh, g, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]
+    block = min(block, t)
+    while t % block:                      # largest power-of-2-ish divisor
+        block //= 2
+    assert block >= 1
+    nb = t // block
+    scale = (1.0 / hd ** 0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    t_idx = jnp.arange(block)
+
+    def body(carry, i):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * block, block, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * block, block, 1)
+        validb = jax.lax.dynamic_slice_in_dim(kv_valid, i * block, block, 1)
+        # scores for this block: (B,K,G,S,block)
+        sc = jnp.einsum("bskgh,btkh->bkgst", qf, kb.astype(jnp.float32))
+        pos_b = i * block + t_idx                              # (block,)
+        mask = validb[:, None, :]                              # (B,1,block)
+        if causal:
+            mask = mask & (pos_b[None, None, :] <= q_pos[:, :, None])
+        sc = jnp.where(mask[:, None, None, :, :], sc, _NEG)
+        # online log-domain update (Eq. 10 streamed; exp as 2^((s-m)·log2e))
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp2((sc - m_new[..., None]) * _LOG2E)         # (B,K,G,S,blk)
+        corr = jnp.exp2((m - m_new) * _LOG2E)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kh, g, s_q), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s_q), jnp.float32)
+    acc0 = jnp.zeros((b, kh, g, s_q, hv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]               # (B,K,G,S,hv)
+    return jnp.moveaxis(out, 3, 1).astype(v.dtype)             # (B,S,K,G,hv)
+
+
+def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:
+    """Blocked path when the scores tensor would exceed ~16 MB f32/head."""
+    return s_q * t > threshold and t % 512 == 0

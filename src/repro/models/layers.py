@@ -1,0 +1,146 @@
+"""Primitive layers — pure-JAX pytree modules (init fn + apply fn).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take (key, ...) and a
+    dtype; apply fns are pure.
+  * activations / softmax go through ``repro.core`` selections so the
+    paper's dual-mode unit is a config switch, not a code fork.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import get_activation
+from repro.core import softmax_unit as unit
+
+Params = dict[str, Any]
+
+
+# ---------------- init helpers ----------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------- linear ----------------
+
+def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    p = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------- norms ----------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["g"] + p["b"]
+
+
+def make_norm(kind: str):
+    if kind == "rms":
+        return rmsnorm_init, rmsnorm
+    if kind == "layer":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------- rotary embedding ----------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd) rotate-half RoPE; positions: (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv       # (..,S,hd/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..,S,1,hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(n_pos: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------- softmax selection ----------------
+
+def softmax_fn(impl: str):
+    """Attention-softmax implementation switch.
+
+    'float'    : jax.nn.softmax (fp32 accumulate)
+    'dualmode' : the paper's unit, bit-accurate int path (jnp emulation —
+                 same numerics the Pallas kernel executes)
+    """
+    if impl == "float":
+        return lambda x: jax.nn.softmax(x, axis=-1)
+    if impl == "dualmode":
+        return lambda x: unit.softmax_dualmode(x.astype(jnp.float32),
+                                               axis=-1).astype(x.dtype)
+    raise ValueError(impl)
+
+
+# ---------------- MLPs ----------------
+
+def mlp_init(key, d: int, d_ff: int, dtype, gated: bool = True,
+             bias: bool = False) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": linear_init(ks[0], d, d_ff, dtype, bias=bias),
+         "down": linear_init(ks[1], d_ff, d, dtype, bias=bias)}
+    if gated:
+        p["gate"] = linear_init(ks[2], d, d_ff, dtype, bias=bias)
+    return p
+
+
+def mlp(p: Params, x, activation: str = "silu"):
+    """(Gated) MLP.  For gated GLU the activation applies to the gate path —
+    this is where the dual-mode unit's GELU/SiLU mode is used."""
+    act = get_activation(activation)
+    up = linear(p["up"], x)
+    if "gate" in p:
+        h = act(linear(p["gate"], x)) * up
+    else:
+        h = act(up)
+    return linear(p["down"], h)

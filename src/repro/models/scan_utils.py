@@ -1,0 +1,38 @@
+"""Chunked sequential scans for recurrent mixers (Mamba / RWKV).
+
+A plain `jax.lax.scan` over S timesteps saves its carry at EVERY step for
+the backward pass — for Mamba's (B, d_inner, d_state) f32 state at
+train_4k that is S x 134 MB ~ 0.5 TB per layer, which no sharding can
+absorb.  The standard fix is two-level: scan over S/Q chunks whose body
+(a Q-step inner scan) is `jax.checkpoint`ed.  Saved residuals drop to the
+S/Q chunk-boundary states; the inner Q steps are recomputed during
+backward (the same compute/memory trade Mamba's chunked CUDA kernels
+make — this is the TPU/XLA-native expression of it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_time_scan(step, h0, xs, chunk: int = 64):
+    """scan(step, h0, xs) with chunk-boundary checkpointing.
+
+    xs: pytree of time-major (S, ...) arrays; returns (h_final, ys) with
+    ys time-major, exactly like jax.lax.scan.  Falls back to a plain scan
+    when S is small or indivisible.
+    """
+    s_len = jax.tree.leaves(xs)[0].shape[0]
+    if s_len <= chunk or s_len % chunk:
+        return jax.lax.scan(step, h0, xs)
+    nc = s_len // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(nc, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def body(h, xc):
+        return jax.lax.scan(step, h, xc)
+
+    h, ys = jax.lax.scan(body, h0, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(s_len, *a.shape[2:]), ys)
+    return h, ys

@@ -1,0 +1,425 @@
+"""Unified transformer stack: every assigned architecture runs through this
+one scan-over-periods decoder (plus an encoder stack for enc-dec models).
+
+The repeating unit is `cfg.pattern` (a tuple of LayerSpec); parameters for
+the `n_periods` repetitions are stacked on a leading axis and consumed by
+`jax.lax.scan`, which keeps HLO size O(period) instead of O(layers) — this
+is what makes 62-layer MiniCPM3 / 40-layer Qwen3 lower-and-compile fast for
+the 80-cell dry-run matrix.
+
+Modes:
+  train   — no caches, full causal (or bidirectional for encoders)
+  prefill — writes KV/state caches from position 0, returns caches
+  decode  — consumes one new token per call at traced position `pos`
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from .attention import (AttnSpec, MLASpec, cross_apply, cross_init, cross_kv,
+                        gqa_apply, gqa_cache_init, gqa_init, mla_apply,
+                        mla_cache_init, mla_init)
+from .layers import (Params, embed_init, linear_init, make_norm, mlp,
+                     mlp_init, sinusoidal_pos_emb)
+from .mamba import MambaSpec, mamba_apply, mamba_init, mamba_state_init
+from .moe import MoESpec, moe_apply, moe_init
+from .rwkv import (RWKVSpec, rwkv_channel_mix, rwkv_cm_init, rwkv_state_init,
+                   rwkv_time_mix, rwkv_tm_init)
+
+
+# ---------------- spec builders ----------------
+
+def attn_spec(cfg: ModelConfig, causal: bool | None = None) -> AttnSpec:
+    return AttnSpec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                    qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias,
+                    rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl,
+                    causal=cfg.causal if causal is None else causal,
+                    use_rope=cfg.use_rope)
+
+
+def mla_spec(cfg: ModelConfig) -> MLASpec:
+    m = cfg.mla
+    return MLASpec(cfg.d_model, cfg.n_heads, m.q_lora_rank, m.kv_lora_rank,
+                   m.nope_dim, m.rope_dim, m.v_dim,
+                   rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl)
+
+
+def mamba_spec(cfg: ModelConfig) -> MambaSpec:
+    m = cfg.mamba
+    return MambaSpec(cfg.d_model, m.d_inner, m.d_state, m.d_conv, m.dt_rank)
+
+
+def rwkv_spec(cfg: ModelConfig) -> RWKVSpec:
+    return RWKVSpec(cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.rwkv_lora_r)
+
+
+def moe_spec(cfg: ModelConfig) -> MoESpec:
+    m = cfg.moe
+    return MoESpec(cfg.d_model, m.d_ff, m.n_experts, m.top_k, m.n_shared,
+                   m.capacity_factor, cfg.activation, cfg.moe_dispatch,
+                   ep_pad=m.ep_pad)
+
+
+# ---------------- block ----------------
+
+def block_init(key, cfg: ModelConfig, spec: LayerSpec, dtype) -> Params:
+    norm_init, _ = make_norm(cfg.norm)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": norm_init(cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = gqa_init(ks[0], attn_spec(cfg), dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_init(ks[0], mla_spec(cfg), dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_init(ks[0], mamba_spec(cfg), dtype)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rwkv_tm_init(ks[0], rwkv_spec(cfg), dtype)
+    elif spec.mixer != "none":
+        raise ValueError(spec.mixer)
+    if spec.cross:
+        p["cross_norm"] = norm_init(cfg.d_model, dtype)
+        p["cross"] = cross_init(ks[1], attn_spec(cfg, causal=False), dtype)
+        p["cross_gate"] = jnp.zeros((), dtype)     # tanh-gated (llama-vision)
+    if spec.ffn != "none":
+        p["norm2"] = norm_init(cfg.d_model, dtype)
+    if spec.ffn == "mlp":
+        p["ffn"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                            gated=cfg.gated_mlp)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_init(ks[2], moe_spec(cfg), dtype)
+    elif spec.ffn == "rwkv_cm":
+        p["ffn"] = rwkv_cm_init(ks[2], rwkv_spec(cfg), dtype)
+    elif spec.ffn != "none":
+        raise ValueError(spec.ffn)
+    return p
+
+
+def block_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_seq: int, dtype) -> Params:
+    c: Params = {}
+    if spec.mixer == "attn":
+        c["kv"] = gqa_cache_init(attn_spec(cfg), batch, max_seq, dtype)
+    elif spec.mixer == "mla":
+        c["kv"] = mla_cache_init(mla_spec(cfg), batch, max_seq, dtype)
+    elif spec.mixer == "mamba":
+        c["state"] = mamba_state_init(mamba_spec(cfg), batch, dtype)
+    elif spec.mixer == "rwkv":
+        c["state"] = rwkv_state_init(rwkv_spec(cfg), batch, dtype)
+    if spec.cross:
+        n_ctx = cfg.n_img_tokens or cfg.n_frames
+        shape = (batch, n_ctx, cfg.n_kv_heads, cfg.hd)
+        c["cross_kv"] = {"k": jnp.zeros(shape, dtype),
+                         "v": jnp.zeros(shape, dtype)}
+    return c
+
+
+class Ctx(NamedTuple):
+    positions: Any            # (B, S) absolute positions
+    pos: Any                  # scalar: cache write offset
+    cross_src: Any = None     # (B, T_ctx, d) encoder/image states, or None
+    cached: bool = False      # prefill/decode (threads caches)
+    # Megatron-style sequence parallelism: the residual stream lives
+    # S-sharded over 'model' (pin_sp); sublayer inputs are gathered to
+    # full-S so tensor-parallel weights apply cleanly (pin_full).  GSPMD
+    # realizes the pair as the classic all-gather/reduce-scatter schedule.
+    pin_sp: Any = None        # callable | None: (dp, 'model', None)
+    pin_full: Any = None      # callable | None: (dp, None, None)
+    moe_axes: Any = None      # (dp_axis, ep_axis) for MoE dispatch pins
+
+
+def _pin(ctx: Ctx, x, kind: str):
+    fn = ctx.pin_sp if kind == "sp" else ctx.pin_full
+    return fn(x) if fn is not None else x
+
+
+def block_apply(p: Params, cfg: ModelConfig, spec: LayerSpec, x, cache,
+                ctx: Ctx):
+    _, norm = make_norm(cfg.norm)
+    new_cache: Params = {}
+    aux = jnp.zeros((), jnp.float32)
+    b = x.shape[0]
+
+    h = _pin(ctx, norm(p["norm1"], x, cfg.norm_eps), "full")
+    if spec.mixer == "attn":
+        o, kv = gqa_apply(p["mixer"], attn_spec(cfg), h,
+                          positions=ctx.positions,
+                          cache=cache.get("kv") if ctx.cached else None,
+                          pos=ctx.pos)
+        if ctx.cached:
+            new_cache["kv"] = kv
+        x = x + o
+    elif spec.mixer == "mla":
+        o, kv = mla_apply(p["mixer"], mla_spec(cfg), h,
+                          positions=ctx.positions,
+                          cache=cache.get("kv") if ctx.cached else None,
+                          pos=ctx.pos)
+        if ctx.cached:
+            new_cache["kv"] = kv
+        x = x + o
+    elif spec.mixer == "mamba":
+        st = (cache["state"] if ctx.cached
+              else mamba_state_init(mamba_spec(cfg), b, x.dtype))
+        # NOTE: axes-pins measured NEUTRAL-to-negative here (EXPERIMENTS.md
+        # §Perf jamba iterations) — GSPMD's own choice wins; knob retained.
+        o, st = mamba_apply(p["mixer"], mamba_spec(cfg), h, state=st)
+        if ctx.cached:
+            new_cache["state"] = st
+        x = x + o
+    elif spec.mixer == "rwkv":
+        st = (cache["state"] if ctx.cached
+              else rwkv_state_init(rwkv_spec(cfg), b, x.dtype))
+        o, tm_st = rwkv_time_mix(p["mixer"], rwkv_spec(cfg), h, state=st)
+        if ctx.cached:
+            new_cache["state"] = {**st, **tm_st}
+        x = x + o
+    if spec.mixer != "none":
+        x = _pin(ctx, x, "sp")
+
+    if spec.cross:
+        h = _pin(ctx, norm(p["cross_norm"], x, cfg.norm_eps), "full")
+        if ctx.cross_src is not None:
+            ckv = cross_kv(p["cross"], attn_spec(cfg, causal=False),
+                           ctx.cross_src)
+        else:
+            ckv = cache["cross_kv"]
+        if ctx.cached:
+            new_cache["cross_kv"] = jax.tree.map(
+                lambda a, b_: a.astype(b_.dtype), ckv, cache["cross_kv"])
+        o = cross_apply(p["cross"], attn_spec(cfg, causal=False), h, ckv)
+        x = _pin(ctx, x + jnp.tanh(p["cross_gate"]) * o, "sp")
+
+    if spec.ffn != "none":
+        h = _pin(ctx, norm(p["norm2"], x, cfg.norm_eps), "full")
+        if spec.ffn == "mlp":
+            x = x + mlp(p["ffn"], h, cfg.activation)
+        elif spec.ffn == "moe":
+            o, aux = moe_apply(p["ffn"], moe_spec(cfg), h,
+                               dropless=ctx.cached, axes=ctx.moe_axes)
+            x = x + o
+        elif spec.ffn == "rwkv_cm":
+            st = (cache["state"] if ctx.cached
+                  else rwkv_state_init(rwkv_spec(cfg), b, x.dtype))
+            o, cm_st = rwkv_channel_mix(p["ffn"], rwkv_spec(cfg), h, state=st)
+            if ctx.cached:
+                new_cache["state"] = {**new_cache.get("state", st), **cm_st}
+            x = x + o
+        x = _pin(ctx, x, "sp")
+    return x, new_cache, aux
+
+
+# ---------------- full model ----------------
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    norm_init, _ = make_norm(cfg.norm)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    if cfg.pos_emb == "learned":
+        params["pos"] = embed_init(keys[2], min(cfg.max_seq, 1 << 16),
+                                   cfg.d_model, dtype)
+    if cfg.prefix:
+        pk = jax.random.split(keys[3], len(cfg.prefix))
+        params["prefix"] = [block_init(pk[i], cfg, s, dtype)
+                            for i, s in enumerate(cfg.prefix)]
+    period_keys = jax.random.split(keys[4], cfg.n_periods)
+
+    def one_period(k):
+        sk = jax.random.split(k, len(cfg.pattern))
+        return [block_init(sk[j], cfg, s, dtype)
+                for j, s in enumerate(cfg.pattern)]
+
+    params["periods"] = jax.vmap(one_period)(period_keys)
+    if cfg.enc_layers:
+        ek = jax.random.split(keys[5], cfg.enc_layers)
+        enc_spec = LayerSpec(mixer="attn", ffn="mlp")
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: block_init(k, _enc_cfg(cfg), enc_spec, dtype))(ek),
+            "norm": norm_init(cfg.d_model, dtype),
+        }
+    return params
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.replace(causal=False, pattern=(LayerSpec(),), prefix=())
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.float32) -> Params:
+    caches: Params = {}
+    if cfg.prefix:
+        caches["prefix"] = [block_cache_init(cfg, s, batch, max_seq, dtype)
+                            for s in cfg.prefix]
+    one = [block_cache_init(cfg, s, batch, max_seq, dtype)
+           for s in cfg.pattern]
+    caches["periods"] = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), one)
+    return caches
+
+
+def encoder_apply(params: Params, cfg: ModelConfig, frames):
+    """Whisper-style encoder over stub frame embeddings (B, T, d)."""
+    _, norm = make_norm(cfg.norm)
+    x = frames + sinusoidal_pos_emb(frames.shape[1], cfg.d_model,
+                                    frames.dtype)
+    ecfg = _enc_cfg(cfg)
+    spec = LayerSpec(mixer="attn", ffn="mlp")
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None, :],
+                           frames.shape[:2])
+    ctx = Ctx(positions=pos, pos=0)
+
+    def body(x, bp):
+        x, _, _ = block_apply(bp, ecfg, spec, x, {}, ctx)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return norm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def _best_group(n: int) -> int:
+    """Divisor of n nearest sqrt(n) — two-level remat group count."""
+    best, target = 1, max(int(n ** 0.5), 1)
+    for g in range(1, n + 1):
+        if n % g == 0 and abs(g - target) < abs(best - target):
+            best = g
+    return best
+
+
+def lm_apply(params: Params, cfg: ModelConfig, tokens, *, pos=0,
+             caches: Params | None = None, cross_src=None,
+             remat: bool = False, last_pos=None, act_pspec=None,
+             return_hidden: bool = False, inner_pins: bool = False,
+             remat_mode: str = "period"):
+    """tokens (B,S) -> (logits, new_caches, aux).
+
+    caches=None  : train mode (full forward, no state threading)
+    caches given : prefill (pos=0, S=seq) or decode (S=1, pos=offset)
+    remat        : activation-checkpoint each scan period (train mode) —
+                   activations are recomputed in backward, so live memory
+                   is O(1 period) instead of O(n_layers)
+    last_pos     : optional (B,) positions — compute logits ONLY at these
+                   rows (prefill: avoids the (B,S,vocab) logits tensor,
+                   which at 32k×150k vocab would dwarf the model itself)
+    act_pspec    : optional PartitionSpec pinned onto the (B,S,d) residual
+                   stream at every period boundary — sequence parallelism:
+                   the remat'd scan carry is stored S/|model|-sharded, and
+                   GSPMD all-gathers only transiently inside blocks
+    return_hidden: skip the LM head, return final-norm hidden states (the
+                   chunked-CE loss applies the head itself)
+    """
+    _, norm = make_norm(cfg.norm)
+    b, sl = tokens.shape
+    x = params["embed"][tokens]
+    # pos may be scalar (lockstep) or (B,) (continuous batching)
+    off = pos if jnp.ndim(pos) == 0 else pos[:, None]
+    positions = jnp.broadcast_to(off + jnp.arange(sl)[None, :], (b, sl))
+    if cfg.pos_emb == "learned":
+        x = x + params["pos"][jnp.clip(positions, 0,
+                                       params["pos"].shape[0] - 1)]
+    elif cfg.pos_emb == "sinusoid":
+        x = x + sinusoidal_pos_emb(sl, cfg.d_model, x.dtype)[None]
+
+    cached = caches is not None
+    pin_sp = pin_full = None
+    if act_pspec is not None and inner_pins:
+        # Megatron-style AG/RS pins inside blocks.  Measured on this
+        # toolchain they LOSE to the boundary-only pin (EXPERIMENTS.md
+        # §Perf: jamba 153 vs 127 GiB/chip) — kept as an opt-in knob.
+        full_spec = type(act_pspec)(act_pspec[0], None, None)
+        pin_sp = lambda h: jax.lax.with_sharding_constraint(h, act_pspec)
+        pin_full = lambda h: jax.lax.with_sharding_constraint(h, full_spec)
+    moe_axes = None
+    if act_pspec is not None:
+        dp_ax = act_pspec[0]
+        in_dp = ("model" in dp_ax) if isinstance(dp_ax, tuple) else \
+            (dp_ax == "model")
+        if not in_dp:                # 'model' free to serve as the EP axis
+            moe_axes = (dp_ax, act_pspec[1] if len(act_pspec) > 1
+                        and act_pspec[1] else "model")
+    ctx = Ctx(positions=positions, pos=pos, cross_src=cross_src,
+              cached=cached, pin_sp=pin_sp, pin_full=pin_full,
+              moe_axes=moe_axes)
+    pin = ((lambda h: jax.lax.with_sharding_constraint(h, act_pspec))
+           if act_pspec is not None else (lambda h: h))
+    x = pin(x)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Params = {}
+
+    if cfg.prefix:
+        new_caches["prefix"] = []
+        for i, spec in enumerate(cfg.prefix):
+            c = caches["prefix"][i] if cached else {}
+            x, nc, aux = block_apply(params["prefix"][i], cfg, spec, x, c, ctx)
+            new_caches["prefix"].append(nc)
+            aux_total = aux_total + aux
+
+    if cached:
+        def body(carry, xs):
+            x, aux_acc = carry
+            pp, pc = xs
+            ncs = []
+            for j, spec in enumerate(cfg.pattern):
+                bp = jax.tree.map(lambda a: a, pp[j])
+                x, nc, aux = block_apply(bp, cfg, spec, x, pc[j], ctx)
+                ncs.append(nc)
+            return (pin(x), aux_acc + aux), ncs
+
+        (x, aux_total), period_caches = jax.lax.scan(
+            body, (x, aux_total), (params["periods"], caches["periods"]))
+        new_caches["periods"] = period_caches
+    else:
+        def body(carry, pp):
+            x, aux_acc = carry
+            for j, spec in enumerate(cfg.pattern):
+                x, _, aux = block_apply(pp[j], cfg, spec, x, {}, ctx)
+                aux_acc = aux_acc + aux
+            return (pin(x), aux_acc), None
+
+        n_p = cfg.n_periods
+        g = _best_group(n_p) if remat_mode == "two_level" else 1
+        if remat and 1 < g < n_p:
+            # two-level (sqrt-L) remat: outer scan saves G boundaries, the
+            # inner scan recomputes its P/G periods during backward —
+            # stored residual-stream copies drop from P to G + P/G without
+            # sequence-sharding the activations (EXPERIMENTS.md §Perf)
+            stacked = jax.tree.map(
+                lambda a: a.reshape(g, n_p // g, *a.shape[1:]),
+                params["periods"])
+            inner = jax.checkpoint(body)
+
+            @jax.checkpoint
+            def outer(carry, pg):
+                c, _ = jax.lax.scan(inner, carry, pg)
+                return c, None
+
+            (x, aux_total), _ = jax.lax.scan(outer, (x, aux_total), stacked)
+        else:
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["periods"])
+
+    if last_pos is not None:
+        x = jnp.take_along_axis(x, last_pos[:, None, None], axis=1)
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, (new_caches if cached else None), aux_total
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]["w"]
+    return logits, (new_caches if cached else None), aux_total
+
+
+def lm_head_weight(params: Params, cfg: ModelConfig):
+    """(d, vocab) head matrix (transposed embed when tied)."""
+    return (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]["w"])

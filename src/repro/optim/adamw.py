@@ -1,0 +1,79 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping — pure JAX.
+
+No optax dependency: the optimizer state is a plain pytree {m, v, step} so
+it shards with the same `param_pspecs` rules as the params (ZeRO-1 falls
+out of `fsdp=True` for free) and checkpointing is one tree.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    m: Params
+    v: Params
+    step: jnp.ndarray          # scalar int32
+
+
+def adamw_init(params: Params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def wsd_schedule(step, *, lr: float, warmup: int, total: int,
+                 min_frac: float = 0.1):
+    """Linear warmup -> cosine decay to min_frac*lr."""
+    step = step.astype(jnp.float32)
+    warm = lr * (step + 1.0) / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree: Params):
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(grads: Params, state: OptState, params: Params, *,
+                 lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """One AdamW step.  `lr` may be a traced scalar (schedule output).
+
+    Returns (new_params, new_state, metrics{grad_norm}).
+    Decay applies only to >=2D params (weights), never norms/biases —
+    the usual transformer convention.
+    """
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / (gn + 1e-6))
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(new_m, new_v, step), {"grad_norm": gn}

@@ -1,0 +1,51 @@
+"""Gradient compression: int8 quantization with error feedback (EF).
+
+At 1000+-node scale the DP all-reduce of bf16 gradients is the dominant
+inter-pod collective; int8 halves (vs bf16) the wire bytes.  We use the
+standard EF-SGD construction [Seide et al. 2014; Karimireddy et al. 2019]:
+
+    c_t   = Q(g_t + e_{t-1})          # quantize grad + carried residual
+    e_t   = (g_t + e_{t-1}) - c_t     # residual stays local
+    update uses c_t
+
+Under GSPMD we cannot literally splice int8 into the emitted all-reduce;
+instead the quantizer runs on the *local shard before the psum* (jit sees
+int8-valued f32 tensors whose reduction is exact in f32), so convergence
+behaviour is faithful and the wire-format win is recorded analytically in
+the roofline (collective_bytes × 0.5 for 'int8' compression).
+
+Off by default (TrainConfig.grad_compress); convergence parity is asserted
+by tests/test_train.py on a toy model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+_QMAX = 127.0
+
+
+def ef_state_init(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_leaf(g, e):
+    x = g.astype(jnp.float32) + e
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / _QMAX
+    q = jnp.round(x / scale)
+    q = jnp.clip(q, -_QMAX, _QMAX)          # int8-valued
+    c = q * scale
+    return c, x - c
+
+
+def compress_decompress(grads: Params, ef: Params):
+    """(grads, ef) -> (int8-valued grads, new ef residuals)."""
+    out = jax.tree.map(_quant_leaf, grads, ef)
+    c = jax.tree.map(lambda t: t[0], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return c, new_ef

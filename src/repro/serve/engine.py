@@ -1,0 +1,231 @@
+"""Batched serving engine: continuous batching over a slotted KV cache.
+
+Two compiled programs serve every request mix (vLLM-style separation):
+
+  prefill(params, row_caches, tokens(1,L))        one request's prompt ->
+      its caches at batch=1 (bucketed prompt lengths bound compile count)
+  decode(params, caches, tokens(B,1), pos(B,))    ONE token for EVERY slot
+      in lockstep; per-slot depths via vector `pos` (per-row cache writes
+      + per-row causal masks in models/attention.py)
+
+The engine then does classic continuous batching on the host: admit a
+queued request whenever a slot frees, splice its prefilled caches into the
+batched cache tree at the slot index, sample, retire on EOS/max_tokens.
+`make_prefill_step`/`make_decode_step` are also what the multi-pod dry-run
+lowers for the decode/prefill shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import encoder_apply, init_caches, lm_apply
+
+Params = Any
+
+
+# ---------------- compiled steps ----------------
+
+def make_prefill_step(cfg: ModelConfig, act_pspec=None):
+    """(params, caches, tokens(B,S), last_idx(B,)[, cross_src]) ->
+    (logits(B,V) at each row's last REAL prompt position, caches).
+
+    Logits are computed only at `last_idx` — prompts shorter than the
+    padded bucket sample from the right position, and the (B,S,vocab)
+    prefill logits tensor never exists.  `act_pspec` pins the residual
+    stream on a production mesh (batch over dp; MoE dispatch pins)."""
+    def prefill(params, caches, tokens, last_idx, cross_src=None):
+        logits, caches, _ = lm_apply(params, cfg, tokens, pos=0,
+                                     caches=caches, cross_src=cross_src,
+                                     last_pos=last_idx, act_pspec=act_pspec)
+        return logits[:, -1, :], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, act_pspec=None):
+    """(params, caches, tokens(B,1), pos(B,)) -> (logits(B,V), caches).
+
+    `pos` is the current depth of every slot (vector => slots advance
+    independently).  Cross-attention KV (VLM/enc-dec) is read from the
+    cache written at prefill time.
+    """
+    def decode(params, caches, tokens, pos):
+        logits, caches, _ = lm_apply(params, cfg, tokens, pos=pos,
+                                     caches=caches, act_pspec=act_pspec)
+        return logits[:, -1, :], caches
+    return decode
+
+
+def _splice_slot(full_tree, row_tree, slot: int):
+    """Write batch=1 cache `row_tree` into slot index `slot` of the batched
+    cache.  The batch axis is 1 for stacked-period leaves ('periods' in the
+    path carries a leading n_periods dim), else 0."""
+    def write(path, full, one):
+        names = [str(getattr(e, "key", getattr(e, "idx", ""))) for e in path]
+        axis = 1 if "periods" in names else 0
+        start = [0] * full.ndim
+        start[axis] = slot
+        return jax.lax.dynamic_update_slice(full, one.astype(full.dtype),
+                                            tuple(start))
+    return jax.tree_util.tree_map_with_path(write, full_tree, row_tree)
+
+
+def sample_token(key, logits, temperature: float):
+    greedy = jnp.argmax(logits, axis=-1)
+    if temperature <= 0.0:
+        return greedy
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+# ---------------- engine ----------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    cross_src: Any = None            # stub frontend embeddings (VLM/encdec)
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    pos: int = 0
+    remaining: int = 0
+    out: list = dataclasses.field(default_factory=list)
+    temperature: float = 0.0
+
+    @property
+    def free(self) -> bool:
+        return self.rid < 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Params, *,
+                 n_slots: int = 4, max_seq: int = 512,
+                 eos_id: int | None = None, dtype=jnp.float32,
+                 prefill_buckets: tuple[int, ...] = (32, 128, 512),
+                 seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_seq = n_slots, max_seq
+        self.eos_id = eos_id
+        self.dtype = dtype
+        self.buckets = tuple(b for b in sorted(prefill_buckets)
+                             if b <= max_seq) or (max_seq,)
+        # state-carrying mixers (mamba/rwkv) integrate every input token —
+        # right-padding a bucket would corrupt their state, so those archs
+        # prefill at exact prompt length (one compile per distinct length)
+        self._exact_prefill = any(
+            s.mixer in ("mamba", "rwkv")
+            for s in tuple(cfg.pattern) + tuple(cfg.prefix))
+        self.caches = init_caches(cfg, n_slots, max_seq, dtype)
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._slots = [_Slot() for _ in range(n_slots)]
+        self._queue: list[Request] = []
+        self._key = jax.random.PRNGKey(seed)
+        self.finished: dict[int, list[int]] = {}
+        self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0}
+
+    # ---- host-side bookkeeping ----
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        if self._exact_prefill:
+            return n
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds largest bucket "
+                         f"{self.buckets[-1]}")
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self._slots):
+            if not self._queue:
+                return
+            if not slot.free:
+                continue
+            req = self._queue.pop(0)
+            L = self._bucket(len(req.prompt))
+            toks = jnp.asarray(req.prompt + [0] * (L - len(req.prompt)),
+                               jnp.int32)[None, :]
+            row = init_caches(self.cfg, 1, self.max_seq, self.dtype)
+            cross = None
+            if req.cross_src is not None:
+                cross = (encoder_apply(self.params, self.cfg, req.cross_src)
+                         if self.cfg.family == "encdec" else req.cross_src)
+            last_idx = jnp.asarray([len(req.prompt) - 1], jnp.int32)
+            logits, row = self._prefill(self.params, row, toks, last_idx,
+                                        cross)
+            # splice the prefilled row caches into the batch at slot i —
+            # stacked-period leaves are (n_periods, B, ...): batch axis 1
+            self.caches = _splice_slot(self.caches, row, i)
+            self._slots[i] = _Slot(rid=req.rid, pos=len(req.prompt),
+                                   remaining=req.max_new, out=[],
+                                   temperature=req.temperature)
+            self._key, k = jax.random.split(self._key)
+            first = sample_token(k, logits[0], req.temperature)
+            self._slots[i].out.append(int(first))
+            self._slots[i].remaining -= 1
+            self._last_tok = self._last_tok.at[i, 0].set(first)
+            self.stats["prefills"] += 1
+            self.stats["admitted"] += 1
+            self._retire(i)
+
+    def _retire(self, i: int) -> None:
+        s = self._slots[i]
+        if s.free:
+            return
+        done = (s.remaining <= 0 or s.pos >= self.max_seq - 1 or
+                (self.eos_id is not None and s.out and
+                 s.out[-1] == self.eos_id))
+        if done:
+            self.finished[s.rid] = s.out
+            self._slots[i] = _Slot()
+
+    @property
+    def active(self) -> int:
+        return sum(not s.free for s in self._slots)
+
+    def pending(self) -> int:
+        return len(self._queue) + self.active
+
+    # ---- one engine step = admit + one lockstep decode ----
+
+    def step(self) -> None:
+        self._admit()
+        if self.active == 0:
+            return
+        pos = jnp.asarray([s.pos for s in self._slots], jnp.int32)
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           self._last_tok, pos)
+        self.stats["decode_steps"] += 1
+        self._key, k = jax.random.split(self._key)
+        keys = jax.random.split(k, self.n_slots)
+        for i, s in enumerate(self._slots):
+            if s.free:
+                continue
+            tok = int(sample_token(keys[i], logits[i], s.temperature))
+            s.out.append(tok)
+            s.pos += 1
+            s.remaining -= 1
+            self._last_tok = self._last_tok.at[i, 0].set(tok)
+            self._retire(i)
+
+    def run(self, requests: list[Request], max_steps: int = 10_000
+            ) -> dict[int, list[int]]:
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while self.pending() and steps < max_steps:
+            self.step()
+            steps += 1
+        return dict(self.finished)

@@ -1,0 +1,2 @@
+from .step import TrainState, make_loss_fn, make_train_step, make_train_state
+from .trainer import Trainer

@@ -1,0 +1,26 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560):
+    """Run `code` in a fresh python with n fake devices; return stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

@@ -1,0 +1,73 @@
+"""Checkpoint store: atomicity, gc, async, restore-with-resharding."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore, latest_step
+
+
+def _tree(k=0):
+    key = jax.random.PRNGKey(k)
+    return {"a": jax.random.normal(key, (8, 4)),
+            "nested": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.int32)},
+            "lst": [jnp.ones((3,)), jnp.zeros((2, 2))]}
+
+
+def test_roundtrip_exact(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(3, t)
+    like = jax.eval_shape(lambda: _tree())
+    got, step, _ = store.restore(like)
+    assert step == 3
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, got)
+
+
+def test_latest_step_ignores_incomplete(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, _tree())
+    # fake a crashed save: dir without manifest
+    os.makedirs(tmp_path / "step_9")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_gc_keeps_newest(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, _tree())
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_3", "step_4"]
+
+
+def test_async_save_then_wait(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(7, _tree(), block=False)
+    store.wait()
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_restore_missing_raises(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        store.restore(_tree())
+
+
+def test_restore_extra_metadata(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(2, _tree(), extra={"arch": "x", "note": 1})
+    _, _, extra = store.restore(jax.eval_shape(lambda: _tree()))
+    assert extra == {"arch": "x", "note": 1}
+
+
+def test_restore_casts_dtype(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, {"w": jnp.ones((4,), jnp.float32)})
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    got, _, _ = store.restore(like)
+    assert got["w"].dtype == jnp.bfloat16

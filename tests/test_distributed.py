@@ -1,0 +1,115 @@
+"""Pipeline parallelism + HLO analyzer + dry-run cell lowering."""
+import pytest
+
+from repro.launch.hlo_analysis import HloProgram, analyze_hlo
+
+
+def test_pipeline_matches_sequential(subproc):
+    code = '''
+import jax, jax.numpy as jnp
+from repro.distributed.pipeline import pipelined, bubble_fraction
+mesh = jax.make_mesh((4,), ("stage",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"])
+params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 16, 16)) * 0.5}
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+y = pipelined(stage_fn, mesh, n_micro=4)(params, x)
+ref = x
+for i in range(4):
+    ref = stage_fn({"w": params["w"][i]}, ref)
+assert float(jnp.abs(y - ref).max()) < 1e-6
+assert abs(bubble_fraction(4, 4) - 3 / 7) < 1e-9
+print("PP_OK")
+'''
+    assert "PP_OK" in subproc(code, n_devices=4)
+
+
+def test_hlo_analyzer_counts_scan_trips(subproc):
+    code = '''
+import jax, jax.numpy as jnp
+from repro.launch.hlo_analysis import analyze_hlo
+def f(x, w):
+    def body(c, _):
+        return jnp.tanh(c @ w), None
+    y, _ = jax.lax.scan(body, x, None, length=12)
+    return y
+sds = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+c = jax.jit(f).lower(sds, sds).compile()
+a = analyze_hlo(c.as_text())
+expected = 12 * 2 * 256 ** 3
+assert abs(a["flops"] - expected) / expected < 0.01, a["flops"]
+print("TRIPS_OK")
+'''
+    assert "TRIPS_OK" in subproc(code, n_devices=1)
+
+
+def test_hlo_analyzer_sees_collectives(subproc):
+    code = '''
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_analysis import analyze_hlo
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+sh = NamedSharding(mesh, P("data"))
+def f(x):
+    return jnp.sum(x)          # cross-device all-reduce
+c = jax.jit(f, in_shardings=sh).lower(
+    jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
+a = analyze_hlo(c.as_text())
+assert a["collective_count"] >= 1, a
+print("COLL_OK")
+'''
+    assert "COLL_OK" in subproc(code, n_devices=4)
+
+
+def test_dryrun_single_cell_end_to_end(subproc):
+    """One full production-mesh cell: lower+compile+roofline on 512 fake
+    devices — the real deliverable, excercised in CI."""
+    code = '''
+from repro.launch.dryrun import run_cell
+rec = run_cell("qwen1.5-0.5b", "decode_32k", multi_pod=False, verbose=False)
+assert rec["ok"], rec.get("error")
+assert rec["flops"] > 0 and rec["bytes_accessed"] > 0
+assert rec["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+assert rec["memory"]["total_hbm_bytes"] < 16e9     # fits v5e HBM
+print("CELL_OK", rec["roofline"]["bottleneck"])
+'''
+    assert "CELL_OK" in subproc(code, n_devices=512)
+
+
+def test_hlo_program_parses_tuple_types():
+    txt = """
+HloModule m
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4]{0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %ar = f32[4]{0} all-reduce(%x), replica_groups={}, to_apply=%cond
+  ROOT %t = (s32[], f32[4]) tuple(%i2, %ar)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4]) tuple(%z, %a)
+  %w = (s32[], f32[4]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+    prog = HloProgram(txt)
+    assert prog.entry == "%main"
+    a = analyze_hlo(txt)
+    # 7 trips x one 16-byte all-reduce x ring factor 2
+    assert a["collective_count"] == 7
+    assert a["collective_wire_bytes"] == 7 * 16 * 2

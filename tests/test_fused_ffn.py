@@ -1,0 +1,48 @@
+"""Fused GLU kernel (interpret mode) vs unfused oracle: shape/dtype/mode
+sweep per the kernel-testing requirement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_ffn import fused_glu_pallas
+from repro.kernels.ref import fused_glu_ref
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize("m,k,f", [(16, 32, 64), (64, 128, 256),
+                                   (128, 64, 512), (32, 100, 96)])
+@pytest.mark.parametrize("mode", ["silu", "gelu"])
+def test_fused_glu_matches_ref(m, k, f, mode):
+    x = jnp.asarray(RNG.normal(size=(m, k)) * 0.5, jnp.float32)
+    wg = jnp.asarray(RNG.normal(size=(k, f)) / k ** 0.5, jnp.float32)
+    wu = jnp.asarray(RNG.normal(size=(k, f)) / k ** 0.5, jnp.float32)
+    y = fused_glu_pallas(x, wg, wu, mode=mode, interpret=True, bm=16, bf=32)
+    want = fused_glu_ref(x, wg, wu, mode)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_glu_dtypes(dtype):
+    x = jnp.asarray(RNG.normal(size=(32, 64)), dtype)
+    wg = jnp.asarray(RNG.normal(size=(64, 128)) * 0.1, dtype)
+    wu = jnp.asarray(RNG.normal(size=(64, 128)) * 0.1, dtype)
+    y = fused_glu_pallas(x, wg, wu, interpret=True, bm=16, bf=64)
+    assert y.dtype == dtype
+    want = fused_glu_ref(x, wg, wu)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2)
+
+
+def test_fused_glu_odd_tiles():
+    """Block pickers must handle non-power-of-two dims."""
+    x = jnp.asarray(RNG.normal(size=(48, 20)), jnp.float32)
+    wg = jnp.asarray(RNG.normal(size=(20, 72)) * 0.2, jnp.float32)
+    wu = jnp.asarray(RNG.normal(size=(20, 72)) * 0.2, jnp.float32)
+    y = fused_glu_pallas(x, wg, wu, interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(fused_glu_ref(x, wg, wu)),
+                               atol=2e-5, rtol=2e-5)

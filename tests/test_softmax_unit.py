@@ -1,0 +1,109 @@
+"""The paper's dual-mode unit: accuracy claims of §IV / Table I.
+
+Bounds mirror the paper: proposed GELU error ~1e-3 regime, strictly
+better than i-GELU; softmax within fixed-point tolerance of FP32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import igelu, softmax_unit as unit
+from repro.core.activations import (gelu_exact, gelu_tanh, gelu_via_softmax,
+                                    silu)
+from repro.core.pwl import pwl_max_error
+
+RNG = np.random.default_rng(0)
+
+
+def test_pwl_fit_quality():
+    e_exp, e_log = pwl_max_error()
+    assert e_exp < 2e-3, e_exp     # 8-piece PWL of 2^v on [0,1)
+    assert e_log < 4e-3, e_log
+
+
+# ---------------- softmax (normal mode) ----------------
+
+@pytest.mark.parametrize("n", [2, 8, 32, 128, 1000])
+def test_softmax_matches_fp32(n):
+    x = jnp.asarray(RNG.normal(size=(16, n)) * 4, jnp.float32)
+    y = unit.softmax_dualmode(x)
+    ref = jax.nn.softmax(x, axis=-1)
+    assert float(jnp.abs(y - ref).max()) < 6e-3
+
+
+def test_softmax_rows_sum_to_one():
+    x = jnp.asarray(RNG.normal(size=(64, 33)) * 8, jnp.float32)
+    y = unit.softmax_dualmode(x)
+    np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, atol=2e-2)
+
+
+@given(st.integers(2, 64), st.floats(0.1, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_softmax_bounded_and_finite(n, scale):
+    x = jnp.asarray(RNG.normal(size=(4, n)) * scale, jnp.float32)
+    y = unit.softmax_dualmode(x)
+    assert bool(jnp.all((y >= 0) & (y <= 1.0 + 1e-3)))
+
+
+def test_softmax_extreme_inputs():
+    x = jnp.asarray([[-32.0, 31.9, 0.0, -31.9]], jnp.float32)
+    y = unit.softmax_dualmode(x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(y[0, 1]) > 0.99
+
+
+# ---------------- GELU mode (Table I analogue) ----------------
+
+def _act_inputs():
+    """Activation-scale inputs: pre-GELU values in transformers are
+    O(1)-O(5); include tails."""
+    return jnp.asarray(np.concatenate([
+        RNG.normal(size=4096) * 1.5,
+        RNG.normal(size=512) * 5.0,
+        np.linspace(-8, 8, 512)]), jnp.float32)
+
+
+def test_gelu_mae_matches_paper_regime():
+    z = _act_inputs()
+    mae_prop = float(jnp.abs(unit.gelu_dualmode(z) - gelu_exact(z)).mean())
+    mae_igelu = float(jnp.abs(igelu.igelu_quant(z) - gelu_exact(z)).mean())
+    # paper Table I: proposed 3.9e-3..1.5e-2, i-GELU 5.4e-2..1.8e-1 (model
+    # outputs); at activation level both are smaller but strictly ordered
+    assert mae_prop < 2e-2, mae_prop
+    assert mae_prop < mae_igelu, (mae_prop, mae_igelu)
+
+
+def test_gelu_mode_vs_float_identity():
+    """Eq. 8 in float == tanh-GELU (exact algebraic identity)."""
+    z = _act_inputs()
+    np.testing.assert_allclose(np.asarray(gelu_via_softmax(z)),
+                               np.asarray(gelu_tanh(z)), atol=1e-5)
+
+
+def test_gelu_int_error_vs_tanh_reference():
+    """The quantized unit approximates ITS OWN math (tanh form) tightly."""
+    z = _act_inputs()
+    err = float(jnp.abs(unit.gelu_dualmode(z) - gelu_tanh(z)).max())
+    assert err < 2e-2, err
+
+
+@given(st.floats(-30.0, 30.0))
+@settings(max_examples=200, deadline=None)
+def test_gelu_pointwise_sane(z):
+    y = float(unit.gelu_dualmode(jnp.asarray([z], jnp.float32))[0])
+    ref = float(gelu_exact(jnp.asarray([z], jnp.float32))[0])
+    assert abs(y - ref) < 0.06 + 0.002 * abs(z)
+
+
+def test_silu_exact_identity_mode():
+    z = _act_inputs()
+    err = float(jnp.abs(unit.silu_dualmode(z) - silu(z)).max())
+    assert err < 2e-2, err
+
+
+def test_gelu_monotone_on_positive():
+    z = jnp.linspace(0.0, 8.0, 256)
+    y = np.asarray(unit.gelu_dualmode(z))
+    assert (np.diff(y) >= -2e-3).all()     # quantization jitter allowed
