@@ -1,11 +1,16 @@
 """Kernel micro-benchmarks: dual-mode unit vs native ops at model shapes."""
 from __future__ import annotations
 
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import softmax_unit as unit
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.attention import _naive_sdpa
 from repro.models.flash import flash_attention
 
 from .common import emit, time_fn
@@ -38,5 +43,45 @@ def main() -> None:
     emit("kernels/flash_attn_1k_us", time_fn(f, q, kk, v), "block=256")
 
 
+def main_flash(json_path: str | None = None) -> None:
+    """Flash-attention shoot-out: naive vs pure-JAX flash vs Pallas flash.
+
+    Records a BENCH_flash.json baseline so later PRs (backward kernel,
+    int-path flash, sharded attention) have a reference.  Off-TPU the
+    Pallas kernel runs in interpret mode — the number is a correctness
+    checkpoint, not a speed claim; on TPU the same entry measures the
+    compiled kernel.
+    """
+    rng = np.random.default_rng(0)
+    b, s, k, g, h = 1, 1024, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, k, g, h)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    valid = jnp.ones((b, s), bool)
+
+    impls = {
+        "naive": jax.jit(lambda q_, k_, v_: _naive_sdpa(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid)),
+        "flash_jax": jax.jit(lambda q_, k_, v_: flash_attention(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid, block=256)),
+        "flash_pallas": lambda q_, k_, v_: flash_attention_pallas(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid),
+    }
+    results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
+                         "head_dim": h},
+               "backend": jax.default_backend(), "us_per_call": {}}
+    for name, fn in impls.items():
+        t = time_fn(fn, q, kk, v)
+        results["us_per_call"][name] = t
+        emit(f"kernels/flash_shootout_{name}_us", t,
+             f"backend={jax.default_backend()}")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+
+
 if __name__ == "__main__":
     main()
+    main_flash("BENCH_flash.json")

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 from __future__ import annotations
 
 import argparse
+import functools
 import traceback
 
 
@@ -14,7 +15,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,fig4,"
-                         "kernels,roofline")
+                         "kernels,flash,roofline")
     args = ap.parse_args()
     from . import (bench_kernels, fig4_combined_savings, roofline,
                    table1_accuracy, table2_dualmode_overhead)
@@ -23,6 +24,8 @@ def main() -> None:
         "table2": table2_dualmode_overhead.main,
         "fig4": fig4_combined_savings.main,
         "kernels": bench_kernels.main,
+        "flash": functools.partial(bench_kernels.main_flash,
+                                   "BENCH_flash.json"),
         "roofline": roofline.main,
     }
     chosen = (args.only.split(",") if args.only else list(sections))

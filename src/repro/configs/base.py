@@ -79,6 +79,14 @@ class ModelConfig:
     mamba: MambaCfg | None = None
     rwkv_lora_r: int = 64
     softmax_impl: str = "float"     # float | dualmode  (paper's unit)
+    # attention execution strategy (kernels/dispatch.py registry):
+    #   auto         naive for short T, blocked online-softmax otherwise
+    #   naive        always materialize (S,T) scores
+    #   flash        pure-JAX blocked online softmax (models/flash.py)
+    #   flash_pallas Pallas blocked kernel (kernels/flash_attention.py)
+    attn_impl: str = "auto"
+    # gated-MLP execution: dense | fused_pallas (kernels/fused_ffn.py)
+    ffn_impl: str = "dense"
     moe_dispatch: str = "sort"      # sort | dense
     # modality stubs (assignment: frontend is a stub, backbone is real)
     enc_layers: int = 0       # whisper encoder depth

@@ -23,10 +23,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import datapath as _dp
+
 from . import igelu as _igelu
 from . import softmax_unit as _unit
-
-_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
 
 
 def gelu_exact(x):
@@ -34,14 +34,12 @@ def gelu_exact(x):
 
 
 def gelu_tanh(x):
-    k = _SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)
-    return 0.5 * x * (1.0 + jnp.tanh(k))
+    return 0.5 * x * (1.0 + jnp.tanh(_dp.gelu_k(x)))
 
 
 def gelu_via_softmax(x):
     """Eq. (8): z * softmax_1^2([k, -k]) == z * sigmoid(2k), float."""
-    k = _SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)
-    return x * jax.nn.sigmoid(2.0 * k)
+    return _dp.gelu(x)
 
 
 def silu(x):
@@ -50,7 +48,7 @@ def silu(x):
 
 def silu_via_softmax(x):
     """Exact identity: z * softmax_1^2([z/2, -z/2])."""
-    return x * jax.nn.sigmoid(x)   # identical by construction; kept for API
+    return _dp.silu(x)
 
 
 def relu2(x):

@@ -20,6 +20,10 @@ SiLU(z) = z * softmax_1^2([z/2, -z/2]) — only the k-datapath differs.
 
 Everything here is int32 (inputs S5.10) and jnp-traceable, so the same code
 is the Pallas kernel body's arithmetic and the oracle for its tests.
+
+This module is the tree's single INT definition of the unit's arithmetic;
+the float-lane form lives in ``repro.kernels.datapath`` (the only other
+place the log2e / GELU-cubic constants appear).
 """
 from __future__ import annotations
 
@@ -107,11 +111,6 @@ def _pair_softmax_first_int(k_fx, k_frac: int):
     log2s = _log2_int(s, EXP_FRAC)
     w = jnp.minimum(t1 - log2s, 0)
     return _exp2_int(w)
-
-
-def gelu_k_float(z):
-    """Float k-datapath: k = sqrt(2/pi) * (z + 0.044715 z^3)."""
-    return math.sqrt(2.0 / math.pi) * (z + 0.044715 * z * z * z)
 
 
 def gelu_k_int(z_fx):

@@ -1,2 +1,17 @@
-"""Pallas kernels for the dual-mode softmax/GELU unit (+ oracles)."""
-from . import ops, ref  # noqa: F401
+"""Pallas kernels for the dual-mode softmax/GELU unit.
+
+Layering (see ARCHITECTURE.md):
+
+  datapath.py   the unit's float arithmetic — ONE definition, shared by
+                every kernel body and the pure-JAX streamed paths
+  tiling.py     one block-shape policy (pad-and-slice, no divisor search)
+  dispatch.py   string -> implementation registry (softmax/attention/ffn)
+  dualmode_softmax.py / fused_ffn.py / flash_attention.py   kernel bodies
+  ops.py        public jit'd ops (custom VJPs, rank/padding handling)
+  ref.py        pure-jnp oracles for the tests
+
+This __init__ deliberately imports nothing: ``core.activations`` consumes
+``kernels.datapath``, while ``kernels.ops`` consumes ``core.activations``
+— eager submodule imports here would close that loop.  Import submodules
+directly (``from repro.kernels import ops, ref`` still works).
+"""

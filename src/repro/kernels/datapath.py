@@ -1,0 +1,125 @@
+"""The shared float datapath of the dual-mode softmax unit.
+
+This module is the single source of truth for the unit's FLOAT arithmetic
+(the "what if the unit had float lanes" form): every exponential is taken
+as 2**t with t in the log2 domain, and every division is a subtraction in
+that domain — exactly the structure of the paper's Eq. (8)/(10) hardware,
+with the 8-piece PWL replaced by native exp2/log2.  The bit-accurate INT
+path (S5.10 / int32) lives in ``repro.core.softmax_unit``; together these
+are the only two definitions of the unit's arithmetic in the tree.
+
+Everything here is plain ``jnp`` on arrays — no pallas imports — so the
+same functions serve as
+
+  * Pallas kernel bodies (``kernels/dualmode_softmax.py``,
+    ``kernels/fused_ffn.py``, ``kernels/flash_attention.py``),
+  * the pure-JAX streamed form (``models/flash.py``), and
+  * the float reference activations (``core/activations.py``).
+
+ROM constants
+-------------
+LOG2E          log2(e): multiply to move a natural-log exponent into the
+               log2 domain (t = x * log2e, then exp(x) = 2**t).
+SQRT_2_OVER_PI / GELU_CUBIC
+               the GELU k-datapath coefficients of Eq. (8):
+               k = sqrt(2/pi) * (z + 0.044715 z^3).
+MASK_VALUE     the additive-mask score for invalid attention positions,
+               shared by the naive and all streamed/blocked paths so they
+               agree bitwise on which keys are "off".  -30.0 (not -1e30)
+               because the unit's ingress quantizer saturates S5.10 inputs
+               at -32 (paper §IV): exp(-30) already underflows the 14-bit
+               exponential ROM, and any more-negative float would quantize
+               to the same word.  Keeping the float paths at the same
+               value means float and dual-mode attention mask identically.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LOG2E = 1.4426950408889634
+SQRT_2_OVER_PI = 0.7978845608028654
+GELU_CUBIC = 0.044715
+MASK_VALUE = -30.0
+
+
+# --------------------------------------------------------------------------
+# row softmax (normal mode, Eq. 10)
+# --------------------------------------------------------------------------
+
+def row_softmax(x, axis: int = -1):
+    """Eq. (10): softmax with the division done in the log2 domain.
+
+    y_i = 2**(t_i - log2(sum_j 2**t_j)),  t = (x - max(x)) * log2(e).
+    """
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    t = (x - m) * LOG2E
+    s = jnp.sum(jnp.exp2(t), axis=axis, keepdims=True)
+    return jnp.exp2(t - jnp.log2(s))
+
+
+# --------------------------------------------------------------------------
+# pair softmax (GELU mode, Eq. 8)
+# --------------------------------------------------------------------------
+
+def gelu_k(z):
+    """The GELU k-datapath: k = sqrt(2/pi) * (z + 0.044715 z^3)."""
+    return SQRT_2_OVER_PI * (z + GELU_CUBIC * z * z * z)
+
+
+def pair_sigmoid(k):
+    """softmax_1^2([k, -k]) = sigma(2k) through the log-domain datapath.
+
+    The two-element softmax of the unit's GELU mode: max tap |k|, two
+    exponentials, the pair adder tap, one log, one exponential.
+    """
+    amax = jnp.abs(k)
+    t1 = (k - amax) * LOG2E
+    t2 = (-k - amax) * LOG2E
+    s = jnp.exp2(t1) + jnp.exp2(t2)
+    return jnp.exp2(t1 - jnp.log2(s))
+
+
+def gelu(z):
+    """GELU mode (Eq. 8): z * softmax_1^2([k, -k])."""
+    return z * pair_sigmoid(gelu_k(z))
+
+
+def silu(z):
+    """Exact-identity SiLU mode: z * softmax_1^2([z/2, -z/2])."""
+    return z * pair_sigmoid(0.5 * z)
+
+
+def pair_act(z, mode: str):
+    """GELU/SiLU selector over the shared pair-softmax datapath."""
+    if mode == "gelu":
+        return gelu(z)
+    if mode == "silu":
+        return silu(z)
+    raise ValueError(f"unknown pair-act mode {mode!r}")
+
+
+# --------------------------------------------------------------------------
+# online softmax (Eq. 10 streamed — flash attention's inner step)
+# --------------------------------------------------------------------------
+
+def online_softmax_update(m, l, s):
+    """One streamed block of Eq. (10) (Milakov & Gimelshein recurrence).
+
+    m, l : (..., 1) running row max / running normalizer
+    s    : (..., N) this block's scores (already masked with MASK_VALUE)
+
+    Returns (m_new, l_new, p, corr) where ``p = 2**((s - m_new)·log2e)``
+    are the unnormalized probabilities of this block and ``corr`` rescales
+    any accumulator built under the old max:  acc <- acc * corr + p @ v.
+    """
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp2((s - m_new) * LOG2E)
+    corr = jnp.exp2((m - m_new) * LOG2E)
+    l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+    return m_new, l_new, p, corr
+
+
+def online_softmax_finish(l, acc):
+    """Final normalization: acc holds sum_j p_j v_j, l the (..., 1) sums."""
+    return acc / jnp.maximum(l, 1e-30)

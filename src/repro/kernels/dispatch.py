@@ -1,0 +1,128 @@
+"""Kernel dispatch registry — every implementation string resolves here.
+
+One place maps config strings to callables for the three datapath
+consumers, so model code never switches on strings itself:
+
+  softmax    'float' | 'dualmode'            (attention probabilities)
+  attention  'auto' | 'naive' | 'flash' | 'flash_pallas'
+  activation 'gelu_exact' | ... (delegates to repro.core.activations)
+  ffn        'dense' | 'fused_pallas'        (gated-MLP execution)
+
+Providers register themselves at import time (``models/attention.py``
+registers 'naive', ``models/flash.py`` registers 'flash' and the 'auto'
+rule, ``kernels/flash_attention.py`` registers 'flash_pallas',
+``kernels/fused_ffn.py`` registers 'fused_pallas') — the registry itself
+imports nothing from ``models``, which keeps the layering acyclic:
+datapath -> kernels -> dispatch -> models.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core import softmax_unit as _unit
+from repro.core.activations import get_activation  # noqa: F401  (re-export)
+
+# --------------------------------------------------------------------------
+# softmax (attention probabilities)
+# --------------------------------------------------------------------------
+
+_SOFTMAX: dict[str, Callable] = {}
+
+
+def register_softmax(name: str, fn: Callable) -> None:
+    _SOFTMAX[name] = fn
+
+
+def get_softmax(impl: str) -> Callable:
+    """Attention-softmax implementation switch.
+
+    'float'    : jax.nn.softmax (fp32 accumulate)
+    'dualmode' : the paper's unit, bit-accurate int path (jnp emulation —
+                 same numerics the Pallas kernel executes)
+    """
+    try:
+        return _SOFTMAX[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown softmax impl {impl!r}; have {sorted(_SOFTMAX)}")
+
+
+register_softmax("float", lambda x: jax.nn.softmax(x, axis=-1))
+register_softmax(
+    "dualmode",
+    lambda x: _unit.softmax_dualmode(
+        x.astype("float32"), axis=-1).astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# attention (scores -> probs -> combine execution strategy)
+# --------------------------------------------------------------------------
+
+_ATTENTION: dict[str, Callable] = {}
+_ATTENTION_AUTO: list[Callable] = []   # single slot: (s_q, t) -> impl name
+
+
+def register_attention(name: str, fn: Callable) -> None:
+    """fn(q, k, v, *, q_pos, kv_valid, causal, scale, softmax_impl)
+    -> (B,S,K,G,hv).
+
+    Every implementation takes the full contract; the blocked/streamed
+    ones accept ``softmax_impl`` and ignore it (they are the float
+    log-domain form by construction — the bit-accurate 'dualmode' unit
+    needs whole score rows and only the naive path can honor it)."""
+    _ATTENTION[name] = fn
+
+
+def set_attention_auto_rule(rule: Callable) -> None:
+    """rule(s_q, t_kv) -> implementation name, used for impl='auto'."""
+    _ATTENTION_AUTO[:] = [rule]
+
+
+def _load_attention_providers() -> None:
+    """Import the provider modules so their registrations run — callers
+    that resolve through the registry directly (serve engine, notebooks)
+    must not depend on having imported ``repro.models`` first."""
+    import repro.kernels.flash_attention  # noqa: F401
+    import repro.models.attention         # noqa: F401  (naive + flash + rule)
+
+
+def resolve_attention(impl: str, s_q: int, t_kv: int) -> str:
+    """Resolve 'auto' to a concrete implementation name."""
+    if impl == "auto" and not _ATTENTION_AUTO:
+        _load_attention_providers()
+    if impl == "auto":
+        return _ATTENTION_AUTO[0](s_q, t_kv) if _ATTENTION_AUTO else "naive"
+    if impl not in _ATTENTION:
+        _load_attention_providers()
+    if impl not in _ATTENTION:
+        raise ValueError(
+            f"unknown attention impl {impl!r}; have {sorted(_ATTENTION)}")
+    return impl
+
+
+def get_attention(impl: str) -> Callable:
+    if impl not in _ATTENTION:
+        _load_attention_providers()
+    return _ATTENTION[impl]
+
+
+# --------------------------------------------------------------------------
+# FFN (gated-MLP execution strategy)
+# --------------------------------------------------------------------------
+
+_FFN: dict[str, Callable | None] = {"dense": None}
+
+
+def register_ffn(name: str, fn: Callable) -> None:
+    """fn(x2d, wg, wu, mode) -> (M, F) fused gate-matmul + activation."""
+    _FFN[name] = fn
+
+
+def get_ffn(impl: str) -> Callable | None:
+    """None means the plain (unfused) path; otherwise a fused GLU kernel."""
+    try:
+        return _FFN[impl]
+    except KeyError:
+        raise ValueError(f"unknown ffn impl {impl!r}; have {sorted(_FFN)}")

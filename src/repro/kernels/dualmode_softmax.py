@@ -12,14 +12,14 @@ and two arithmetic paths:
 
   precision='int'   bit-accurate S5.10 / int32 emulation of the hardware
                     (quantize at the VMEM tile boundary, exactly where the
-                    unit's ingress quantizer sits)
-  precision='float' same algorithm in f32 (PWL replaced by native exp2/
-                    log2 — the "what if the unit had float lanes" ablation)
+                    unit's ingress quantizer sits) — repro.core.softmax_unit
+  precision='float' the same algorithm in f32 — repro.kernels.datapath
 
-Tiling: GELU/SiLU modes are elementwise -> 2D tile grid.  Softmax mode
-keeps whole rows resident in VMEM (reductions need the full row) and grids
-over row blocks.  Block shapes are chosen so a tile is <= ~2 MiB of VMEM
-and the trailing dim is a multiple of 128 (VPU lane width).
+Both bodies are one-line calls into the shared libraries: this file owns
+only the pallas_call plumbing.  Tiling comes from kernels/tiling.py —
+non-divisible shapes are padded up to the block grid and sliced back
+(softmax pads columns with datapath.MASK_VALUE so the padded tail carries
+no probability mass), never degraded to 1-wide blocks.
 
 Validated on CPU with interpret=True against kernels/ref.py; the int path
 is bit-identical to repro.core.softmax_unit by construction (same jnp ops).
@@ -35,80 +35,55 @@ from jax.experimental import pallas as pl
 from repro.core import softmax_unit as unit
 from repro.core.fixedpoint import EXP_FRAC, IN_FRAC, dequantize, quantize
 
+from . import datapath as dp
+from . import tiling
+
 # --- kernel bodies ----------------------------------------------------------
 
 def _softmax_body(x_ref, o_ref, *, precision: str):
-    x = x_ref[...]
+    x = x_ref[...].astype(jnp.float32)
     if precision == "int":
-        y = unit.softmax_int(quantize(x.astype(jnp.float32)), axis=-1)
+        y = unit.softmax_int(quantize(x), axis=-1)
         o_ref[...] = dequantize(y, EXP_FRAC).astype(o_ref.dtype)
     else:
-        x = x.astype(jnp.float32)
-        m = jnp.max(x, axis=-1, keepdims=True)
-        t = (x - m) * 1.4426950408889634           # log2 domain
-        e = jnp.exp2(t)
-        s = jnp.sum(e, axis=-1, keepdims=True)
-        w = t - jnp.log2(s)                        # divide in log domain
-        o_ref[...] = jnp.exp2(w).astype(o_ref.dtype)
+        o_ref[...] = dp.row_softmax(x).astype(o_ref.dtype)
 
 
 def _pair_act_body(z_ref, o_ref, *, mode: str, precision: str):
-    z = z_ref[...]
+    z = z_ref[...].astype(jnp.float32)
     if precision == "int":
-        zq = quantize(z.astype(jnp.float32))
+        zq = quantize(z)
         y = unit.gelu_int(zq) if mode == "gelu" else unit.silu_int(zq)
         o_ref[...] = dequantize(y, IN_FRAC).astype(o_ref.dtype)
     else:
-        z = z.astype(jnp.float32)
-        if mode == "gelu":
-            k = unit.gelu_k_float(z)
-        else:
-            k = 0.5 * z
-        # softmax_1^2([k,-k]) through the same float log-domain datapath
-        amax = jnp.abs(k)
-        l2e = 1.4426950408889634
-        t1 = (k - amax) * l2e
-        t2 = (-k - amax) * l2e
-        s = jnp.exp2(t1) + jnp.exp2(t2)
-        sig = jnp.exp2(t1 - jnp.log2(s))
-        o_ref[...] = (z * sig).astype(o_ref.dtype)
+        o_ref[...] = dp.pair_act(z, mode).astype(o_ref.dtype)
 
 
 # --- pallas_call wrappers ----------------------------------------------------
-
-def _row_block(n_rows: int, n_cols: int) -> int:
-    """Rows per block: keep tile under ~2 MiB f32, at least 1 row."""
-    budget = (2 * 1024 * 1024) // 4
-    rows = max(1, budget // max(n_cols, 1))
-    while n_rows % rows:
-        rows -= 1
-    return rows
-
-
-def _tile2d(m: int, n: int) -> tuple[int, int]:
-    bn = n if n % 128 else min(n, 512)
-    while n % bn:
-        bn -= 1
-    bm = max(1, ((2 * 1024 * 1024) // 4) // bn)
-    while m % bm:
-        bm -= 1
-    return bm, bn
-
 
 @functools.partial(jax.jit, static_argnames=("precision", "interpret"))
 def softmax_pallas(x, *, precision: str = "int", interpret: bool = False):
     """Row softmax over the last axis of a 2D array via the dual-mode unit."""
     assert x.ndim == 2, "kernel operates on (rows, row_len)"
     rows, cols = x.shape
-    br = _row_block(rows, cols)
-    return pl.pallas_call(
+    # pad the row tail so padded columns carry no probability mass.  The
+    # int path pads with MASK_VALUE (-30 quantizes into the S5.10
+    # saturation band, whose 14-bit exponential is exactly 0); the float
+    # lane never quantizes, so it needs a true -inf — a finite pad would
+    # dominate rows whose real scores all sit below it.
+    pad = dp.MASK_VALUE if precision == "int" else -jnp.inf
+    xp, _ = tiling.pad_dim(x, 1, tiling.LANE, value=pad)
+    br = tiling.row_block(rows, xp.shape[1])
+    xp, _ = tiling.pad_dim(xp, 0, br, value=pad)
+    y = pl.pallas_call(
         functools.partial(_softmax_body, precision=precision),
-        grid=(rows // br,),
-        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(xp.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, xp.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, xp.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
         interpret=interpret,
-    )(x)
+    )(xp)
+    return tiling.unpad(tiling.unpad(y, 0, rows), 1, cols)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "precision", "interpret"))
@@ -117,12 +92,15 @@ def pair_act_pallas(z, *, mode: str = "gelu", precision: str = "int",
     """GELU/SiLU over a 2D array via the unit's GELU mode (elementwise)."""
     assert z.ndim == 2
     m, n = z.shape
-    bm, bn = _tile2d(m, n)
-    return pl.pallas_call(
+    bm, bn = tiling.tile2d(m, n)
+    zp, _ = tiling.pad_dim(z, 0, bm)
+    zp, _ = tiling.pad_dim(zp, 1, bn)
+    y = pl.pallas_call(
         functools.partial(_pair_act_body, mode=mode, precision=precision),
-        grid=(m // bm, n // bn),
+        grid=(zp.shape[0] // bm, zp.shape[1] // bn),
         in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct(z.shape, z.dtype),
+        out_shape=jax.ShapeDtypeStruct(zp.shape, z.dtype),
         interpret=interpret,
-    )(z)
+    )(zp)
+    return tiling.unpad(tiling.unpad(y, 0, m), 1, n)

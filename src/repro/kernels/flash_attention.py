@@ -1,0 +1,176 @@
+"""Pallas blocked flash attention on the unit's log-domain datapath.
+
+The paper's softmax normalizes in the LOG domain (Eq. 10); that form
+telescopes exactly into the online-softmax recurrence, so the streamed
+inner step here is literally :func:`repro.kernels.datapath.
+online_softmax_update` — the same function the pure-JAX blocked path
+(``models/flash.py``) runs.  This kernel adds the Pallas grid around it:
+KV is streamed through VMEM in (block_kv)-sized tiles while the running
+(m, l, acc) state lives in VMEM scratch across the sequential kv grid
+dimension, so the (S, T) score matrix is never materialized in HBM.
+
+Shapes match the model-side attention core (GQA/MLA compatible):
+
+    q (B, S, K, G, h)   k (B, T, K, h)   v (B, T, K, hv)  ->  (B, S, K, G, hv)
+
+with G query groups per KV head and hv possibly != h (MLA).  Masking: kv
+position t attends iff ``kv_valid[b, t]`` and (not causal or
+``t <= q_pos[b, s]``); masked scores take ``datapath.MASK_VALUE`` exactly
+like the naive path, so all three implementations agree on masking.
+
+Non-divisible S/T are padded up to the block grid (``kernels/tiling.py``
+policy) and the output sliced back; padded KV rows are simply invalid.
+Runs on CPU with ``interpret=True`` (the default off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import datapath as dp
+from . import dispatch, tiling
+
+_STATE_LANES = 128   # lane width of the (m, l) scratch rows
+
+
+def _flash_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, block_kv: int, causal: bool,
+                t_kv: int):
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, dp.MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, 0, :].astype(jnp.float32)          # (bq, h) pre-scaled
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, h)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, hv)
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bkv)
+
+    mask = valid_ref[...] != 0                            # (1, bkv) -> bcast
+    kv_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if causal:
+        q_pos = qpos_ref[...].reshape(-1, 1)              # (bq, 1)
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, dp.MASK_VALUE)
+    # tiling-padded phantom keys carry NO mass (-inf); user-invalid keys
+    # keep the finite MASK_VALUE so masking matches the naive path bitwise
+    s = jnp.where(kv_pos < t_kv, s, -jnp.inf)
+
+    m, l = m_ref[:, :1], l_ref[:, :1]                     # (bq, 1)
+    m_new, l_new, p, corr = dp.online_softmax_update(m, l, s)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, vb, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == pl.num_programs(3) - 1)
+    def _():
+        out = dp.online_softmax_finish(l_ref[:, :1], acc_ref[...])
+        o_ref[0, :, 0, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_kv", "interpret"))
+def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int | None = None,
+                           block_kv: int | None = None,
+                           interpret: bool | None = None):
+    """Blocked flash attention; see module docstring for shapes/masking.
+
+    Differentiable: Pallas has no AD rule for the streamed body, so the
+    backward pass recomputes through the pure-JAX blocked path
+    (models/flash.py) — the identical online-softmax arithmetic, just
+    unfused.  Dedicated dq/dk/dv Pallas kernels are a ROADMAP item.
+    """
+    b, s_q, kh, g, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = (1.0 / hd ** 0.5) if scale is None else scale
+
+    bq, bkv = tiling.attention_blocks(s_q, t)
+    bq = bq if block_q is None else block_q
+    bkv = bkv if block_kv is None else block_kv
+
+    def forward(q_, k_, v_, q_pos_, kv_valid_):
+        qf, _ = tiling.pad_dim(q_.astype(jnp.float32) * scale, 1, bq)
+        qp, _ = tiling.pad_dim(q_pos_.astype(jnp.int32), 1, bq)
+        kf, _ = tiling.pad_dim(k_, 1, bkv)
+        vf, _ = tiling.pad_dim(v_, 1, bkv)
+        valid, _ = tiling.pad_dim(kv_valid_.astype(jnp.int32), 1, bkv,
+                                  value=0)
+        s_p, t_p = qf.shape[1], kf.shape[1]
+
+        grid = (b, kh * g, s_p // bq, t_p // bkv)
+        out = pl.pallas_call(
+            functools.partial(_flash_body, block_kv=bkv, causal=causal,
+                              t_kv=t),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq), lambda b_, h_, qi, kj: (b_, qi)),
+                pl.BlockSpec((1, bkv), lambda b_, h_, qi, kj: (b_, kj)),
+                pl.BlockSpec((1, bq, 1, 1, hd),
+                             lambda b_, h_, qi, kj:
+                             (b_, qi, h_ // g, h_ % g, 0)),
+                pl.BlockSpec((1, bkv, 1, hd),
+                             lambda b_, h_, qi, kj: (b_, kj, h_ // g, 0)),
+                pl.BlockSpec((1, bkv, 1, hv),
+                             lambda b_, h_, qi, kj: (b_, kj, h_ // g, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bq, 1, 1, hv),
+                lambda b_, h_, qi, kj: (b_, qi, h_ // g, h_ % g, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, s_p, kh, g, hv), v_.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((bq, _STATE_LANES), jnp.float32),  # running max m
+                pltpu.VMEM((bq, _STATE_LANES), jnp.float32),  # running sum l
+                pltpu.VMEM((bq, hv), jnp.float32),            # weighted-v acc
+            ],
+            interpret=interpret,
+        )(qp, valid, qf, kf, vf)
+        return tiling.unpad(out, 1, s_q)
+
+    # q_pos / kv_valid ride along as explicit primals (closing over them
+    # would leak the enclosing jit's tracers into the custom_vjp jaxpr);
+    # being integer/bool they get float0 cotangents.
+    @jax.custom_vjp
+    def run(q_, k_, v_, q_pos_, kv_valid_):
+        return forward(q_, k_, v_, q_pos_, kv_valid_)
+
+    def fwd(q_, k_, v_, q_pos_, kv_valid_):
+        return forward(q_, k_, v_, q_pos_, kv_valid_), \
+            (q_, k_, v_, q_pos_, kv_valid_)
+
+    def bwd(res, gy):
+        import numpy as np
+        from repro.models.flash import flash_attention as flash_ref
+        q_, k_, v_, q_pos_, kv_valid_ = res
+        _, vjp = jax.vjp(
+            lambda a, b_, c: flash_ref(a, b_, c, q_pos=q_pos_,
+                                       kv_valid=kv_valid_, causal=causal,
+                                       scale=scale), q_, k_, v_)
+        f0 = jax.dtypes.float0
+        return (*vjp(gy), np.zeros(q_pos_.shape, f0),
+                np.zeros(kv_valid_.shape, f0))
+
+    run.defvjp(fwd, bwd)
+    return run(q, k, v, q_pos, kv_valid)
+
+
+def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
+                     softmax_impl="float"):
+    return flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                  causal=causal, scale=scale)
+
+
+dispatch.register_attention("flash_pallas", _attention_entry)

@@ -25,14 +25,6 @@ def _as_2d(x):
     return x.reshape(-1, x.shape[-1]), x.shape
 
 
-def _pad_cols(x2, multiple=128, value=0.0):
-    n = x2.shape[-1]
-    pad = (-n) % multiple
-    if pad:
-        x2 = jnp.pad(x2, ((0, 0), (0, pad)), constant_values=value)
-    return x2, pad
-
-
 # ---------------- softmax (normal mode) ----------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
@@ -46,10 +38,8 @@ def _softmax_fwd_impl(x, precision, use_kernel, interpret):
     if not use_kernel:
         return unit.softmax_dualmode(x, axis=-1).astype(x.dtype)
     x2, shape = _as_2d(x)
-    x2p, pad = _pad_cols(x2, 128, value=-30.0)   # pad with ~-inf in S5.10
-    y = dk.softmax_pallas(x2p, precision=precision, interpret=interpret)
-    if pad:
-        y = y[:, : shape[-1]]
+    # non-LANE row lengths are padded inside the kernel with MASK_VALUE
+    y = dk.softmax_pallas(x2, precision=precision, interpret=interpret)
     return y.reshape(shape)
 
 
@@ -74,11 +64,8 @@ def _pair_act_fwd_impl(z, mode, precision, use_kernel, interpret):
         f = unit.gelu_dualmode if mode == "gelu" else unit.silu_dualmode
         return f(z).astype(z.dtype)
     z2, shape = _as_2d(z)
-    z2p, pad = _pad_cols(z2, 128)
-    y = dk.pair_act_pallas(z2p, mode=mode, precision=precision,
+    y = dk.pair_act_pallas(z2, mode=mode, precision=precision,
                            interpret=interpret)
-    if pad:
-        y = y[:, : shape[-1]]
     return y.reshape(shape)
 
 

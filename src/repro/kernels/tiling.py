@@ -1,0 +1,102 @@
+"""One tiling policy for every Pallas kernel in this package.
+
+Replaces the three divergent per-kernel heuristics the kernels used to
+carry (``_row_block`` in dualmode_softmax, ``_tile2d`` there too, ``_pick``
+in fused_ffn), each of which searched for an exact divisor of the problem
+shape and so degraded to 1-wide blocks on primes / odd sizes.  The policy
+here never shrinks a block to fit a remainder: callers PAD the operand up
+to a block multiple with :func:`pad_dim` and slice the result back with
+:func:`unpad` — blocks stay VPU/MXU aligned for any input shape.
+
+Constants follow the TPU layout rules (pallas guide §Tiling):
+lane width 128, f32 sublane 8, ~16 MiB VMEM per core of which we budget
+~2 MiB per operand tile.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANE = 128            # VPU lane width / MXU edge: last-dim block multiple
+SUBLANE = 8           # f32 sublane: second-to-last-dim block multiple
+VMEM_TILE_BUDGET = 2 * 1024 * 1024   # bytes per operand tile
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(n: int, multiple: int) -> int:
+    return cdiv(n, multiple) * multiple
+
+
+def fit_block(n: int, multiple: int, cap: int) -> int:
+    """Largest aligned block that divides the minimally padded extent.
+
+    Pads ``n`` only up to the next ``multiple`` (the hardware alignment),
+    then picks the largest block <= cap that is a multiple of ``multiple``
+    AND divides that padded extent — so block choice never inflates the
+    padding beyond alignment (513 cols -> 640 with 128-wide blocks, not
+    1024 with a blind 512 block)."""
+    padded = round_up(n, multiple)
+    cap = max(min(cap - cap % multiple, padded), multiple)
+    for b in range(cap, 0, -multiple):
+        if padded % b == 0:
+            return b
+    return multiple
+
+
+def pad_dim(x, axis: int, multiple: int, value=0.0):
+    """Pad ``x`` along ``axis`` up to a multiple; returns (padded, pad)."""
+    pad = (-x.shape[axis]) % multiple
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths, constant_values=value)
+    return x, pad
+
+
+def unpad(y, axis: int, n: int):
+    """Slice ``y`` back to length ``n`` along ``axis``."""
+    if y.shape[axis] == n:
+        return y
+    idx = [slice(None)] * y.ndim
+    idx[axis] = slice(0, n)
+    return y[tuple(idx)]
+
+
+def row_block(n_rows: int, n_cols: int, itemsize: int = 4) -> int:
+    """Rows per block for whole-row kernels (row reductions need full rows).
+
+    The row length is fixed at ``n_cols`` (pad it to a LANE multiple first);
+    rows per block fill the VMEM tile budget, SUBLANE-aligned.  Callers pad
+    the row count to a multiple of the returned block.
+    """
+    rows = max(VMEM_TILE_BUDGET // (max(n_cols, 1) * itemsize), SUBLANE)
+    return fit_block(n_rows, SUBLANE, rows)
+
+
+def tile2d(m: int, n: int, itemsize: int = 4) -> tuple[int, int]:
+    """(bm, bn) for elementwise 2D kernels: LANE-wide, budget-bounded."""
+    bn = fit_block(n, LANE, 512)
+    bm = fit_block(m, SUBLANE,
+                   max(VMEM_TILE_BUDGET // (bn * itemsize), SUBLANE))
+    return bm, bn
+
+
+def matmul_blocks(m: int, f: int, want_m: int = 128,
+                  want_f: int = 512) -> tuple[int, int]:
+    """(bm, bf) output-tile shape for matmul-epilogue kernels.
+
+    MXU-aligned (multiples of SUBLANE/LANE); blocks divide the minimally
+    padded extent instead of forcing a pad up to the wanted block size.
+    """
+    return fit_block(m, SUBLANE, want_m), fit_block(f, LANE, want_f)
+
+
+def attention_blocks(s_q: int, t_kv: int) -> tuple[int, int]:
+    """(bq, bkv) for blocked attention: q rows x kv keys per grid step.
+
+    Scores tile is (bq, bkv) f32; 128x512 = 256 KiB, well inside budget,
+    with kv LANE-aligned (it is the score tile's minor dim).
+    """
+    return fit_block(s_q, SUBLANE, 128), fit_block(t_kv, LANE, 512)

@@ -5,6 +5,17 @@ from __future__ import annotations
 import jax
 
 
+def auto_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis_types where this jax has the
+    concept (jax >= 0.5); on older jax Auto is the only behavior, so the
+    kwarg is simply omitted.  Every mesh in the repo goes through here."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
 
@@ -14,13 +25,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return auto_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Dev mesh over whatever devices exist (CPU tests, examples)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return auto_mesh((n // model, model), ("data", "model"))

@@ -12,9 +12,12 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .flash import flash_attention, use_flash
+from repro.kernels import datapath as dp
+from repro.kernels import dispatch
+from repro.kernels import flash_attention as _pallas_flash  # noqa: F401
+from . import flash as _flash                               # noqa: F401
 from .layers import (Params, apply_rope, linear, linear_init, rmsnorm,
-                     rmsnorm_init, softmax_fn)
+                     rmsnorm_init)
 
 
 class AttnSpec(NamedTuple):
@@ -28,6 +31,7 @@ class AttnSpec(NamedTuple):
     softmax_impl: str = "float"
     causal: bool = True
     use_rope: bool = True     # Jamba attends without positional encoding
+    attn_impl: str = "auto"   # auto | naive | flash | flash_pallas
 
 
 class MLASpec(NamedTuple):
@@ -40,30 +44,15 @@ class MLASpec(NamedTuple):
     v_dim: int
     rope_theta: float = 10000.0
     softmax_impl: str = "float"
+    attn_impl: str = "auto"
 
 
 # ---------------- shared core ----------------
 
-def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
-          scale: float | None = None):
-    """q: (B,S,K,G,h)  k/v: (B,T,K,hk)/(B,T,K,hv)  q_pos: (B,S)
-    kv_valid: (B,T) bool.
-
-    Returns (B,S,K,G,hv).  Causality: kv position t attends iff
-    kv_valid[t] and (not causal or t_pos <= q_pos).  kv positions are
-    their cache indices (prefill writes at [0..S), decode appends).
-
-    Dispatch: when the (S,T) score tile is too large to materialize the
-    blocked online-softmax path streams KV (models/flash.py) — same
-    log-domain arithmetic as the paper's unit, in streaming form.  The
-    bit-accurate dual-mode unit needs whole score rows, so softmax_impl=
-    'dualmode' applies on the naive path (short T: decode steps, encoder
-    blocks) and falls back to the float log-domain form when blocked.
-    """
+def _naive_sdpa(q, k, v, *, q_pos, kv_valid, causal=True,
+                scale: float | None = None, softmax_impl: str = "float"):
+    """Materialized-scores attention (the short-T / dual-mode path)."""
     b, s_q, t = q.shape[0], q.shape[1], k.shape[1]
-    if use_flash(s_q, t):
-        return flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
-                               causal=causal, scale=scale)
     scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
     scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
     t_pos = jnp.arange(t)[None, :]                          # (1,T) cache idx
@@ -72,9 +61,42 @@ def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
         mask = mask & (t_pos[:, None, :] <= q_pos[:, :, None])  # (B,S,T)
     else:
         mask = jnp.broadcast_to(mask, (b, s_q, t))
-    scores = jnp.where(mask[:, None, None, :, :], scores, -30.0)
-    probs = softmax_fn(softmax_impl)(scores).astype(v.dtype)
+    scores = jnp.where(mask[:, None, None, :, :], scores, dp.MASK_VALUE)
+    probs = dispatch.get_softmax(softmax_impl)(scores).astype(v.dtype)
     return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+dispatch.register_attention(
+    "naive",
+    lambda q, k, v, *, q_pos, kv_valid, causal, scale,
+    softmax_impl="float": _naive_sdpa(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal, scale=scale,
+        softmax_impl=softmax_impl))
+
+
+def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
+          scale: float | None = None, attn_impl: str = "auto"):
+    """q: (B,S,K,G,h)  k/v: (B,T,K,hk)/(B,T,K,hv)  q_pos: (B,S)
+    kv_valid: (B,T) bool.
+
+    Returns (B,S,K,G,hv).  Causality: kv position t attends iff
+    kv_valid[t] and (not causal or t_pos <= q_pos).  kv positions are
+    their cache indices (prefill writes at [0..S), decode appends).
+
+    Dispatch goes through the kernel registry (kernels/dispatch.py):
+    'auto' streams KV through the blocked online-softmax path when the
+    (S,T) score tile is too large to materialize (models/flash.py, or the
+    Pallas kernel with attn_impl='flash_pallas') — same log-domain
+    arithmetic as the paper's unit, in streaming form.  The bit-accurate
+    dual-mode unit needs whole score rows, so softmax_impl='dualmode'
+    applies on the naive path (short T: decode steps, encoder blocks) and
+    falls back to the float log-domain form when blocked.
+    """
+    s_q, t = q.shape[1], k.shape[1]
+    impl = dispatch.resolve_attention(attn_impl, s_q, t)
+    return dispatch.get_attention(impl)(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+        scale=scale, softmax_impl=softmax_impl)
 
 
 def _write_seq(buf, new, pos):
@@ -150,7 +172,8 @@ def gqa_apply(p: Params, s: AttnSpec, x, *, positions, cache=None, pos=0):
         kv_valid = jnp.ones((b, sl), dtype=bool)
     qg = q.reshape(b, sl, s.n_kv_heads, g, s.head_dim)
     o = _sdpa(qg, k_all, v_all, q_pos=positions, kv_valid=kv_valid,
-              softmax_impl=s.softmax_impl, causal=s.causal)
+              softmax_impl=s.softmax_impl, causal=s.causal,
+              attn_impl=s.attn_impl)
     o = o.reshape(b, sl, s.n_heads * s.head_dim)
     return linear(p["wo"], o), cache
 
@@ -223,7 +246,7 @@ def mla_apply(p: Params, s: MLASpec, x, *, positions, cache=None, pos=0):
                                   (b, t, s.n_heads, s.rope_dim))], axis=-1)
     o = _sdpa(q_cat, k_cat, v, q_pos=positions, kv_valid=kv_valid,
               softmax_impl=s.softmax_impl, causal=True,
-              scale=1.0 / qk_head ** 0.5)
+              scale=1.0 / qk_head ** 0.5, attn_impl=s.attn_impl)
     o = o.reshape(b, sl, s.n_heads * s.v_dim)
     return linear(p["wo"], o), cache
 
@@ -253,5 +276,6 @@ def cross_apply(p: Params, s: AttnSpec, x, kv: Params):
     t = kv["k"].shape[1]
     valid = jnp.ones((b, t), dtype=bool)
     o = _sdpa(q, kv["k"], kv["v"], q_pos=jnp.zeros((b, sl), jnp.int32),
-              kv_valid=valid, softmax_impl=s.softmax_impl, causal=False)
+              kv_valid=valid, softmax_impl=s.softmax_impl, causal=False,
+              attn_impl=s.attn_impl)
     return linear(p["wo"], o.reshape(b, sl, s.n_heads * s.head_dim))

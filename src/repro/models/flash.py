@@ -10,22 +10,25 @@ LOG domain (Eq. 10), y = 2^(t_i - m - log2 Σ 2^(t_j - m)).  That form
 telescopes exactly into the online-softmax recurrence (Milakov &
 Gimelshein [22], the same family the paper's adder-tree architecture
 cites): carrying (m, l) per row IS the streaming evaluation of Eq. 10.
-We therefore compute every exponential as exp2((s - m) * log2e) — the
-2^u·2^v decomposition the hardware unit uses — so the blocked path is the
-unit's own arithmetic, streamed.  (The bit-accurate int path needs whole
-rows and stays on the naive path used for short T.)
+The inner step is therefore ``repro.kernels.datapath.
+online_softmax_update`` — the unit's own arithmetic, streamed, and the
+SAME function the Pallas kernel body executes (kernels/flash_attention.py
+is this loop with a Pallas grid around it).  (The bit-accurate int path
+needs whole rows and stays on the naive path used for short T.)
 
 Shapes: q (B,S,K,G,h), k (B,T,K,h), v (B,T,K,hv) -> out (B,S,K,G,hv).
 hv may differ from h (MLA).  Masking: kv position t attends iff
-kv_valid[b,t] and (not causal or t <= q_pos[b,s]).
+kv_valid[b,t] and (not causal or t <= q_pos[b,s]); masked scores take
+``datapath.MASK_VALUE`` so every attention implementation masks
+identically.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-_LOG2E = 1.4426950408889634
-_NEG = -1e30
+from repro.kernels import datapath as dp
+from repro.kernels import dispatch, tiling
 
 
 def flash_attention(q, k, v, *, q_pos, kv_valid, causal: bool = True,
@@ -34,10 +37,12 @@ def flash_attention(q, k, v, *, q_pos, kv_valid, causal: bool = True,
     t = k.shape[1]
     hv = v.shape[-1]
     block = min(block, t)
-    while t % block:                      # largest power-of-2-ish divisor
-        block //= 2
-    assert block >= 1
-    nb = t // block
+    # non-divisible T: pad KV up to a block multiple (tiling policy) with
+    # invalid keys, instead of shrinking the block toward a 1-wide scan
+    k, _ = tiling.pad_dim(k, 1, block)
+    v, _ = tiling.pad_dim(v, 1, block)
+    kv_valid, _ = tiling.pad_dim(kv_valid, 1, block, value=False)
+    nb = k.shape[1] // block
     scale = (1.0 / hd ** 0.5) if scale is None else scale
 
     qf = q.astype(jnp.float32) * scale
@@ -54,24 +59,38 @@ def flash_attention(q, k, v, *, q_pos, kv_valid, causal: bool = True,
         mask = validb[:, None, :]                              # (B,1,block)
         if causal:
             mask = mask & (pos_b[None, None, :] <= q_pos[:, :, None])
-        sc = jnp.where(mask[:, None, None, :, :], sc, _NEG)
-        # online log-domain update (Eq. 10 streamed; exp as 2^((s-m)·log2e))
-        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
-        p = jnp.exp2((sc - m_new[..., None]) * _LOG2E)         # (B,K,G,S,blk)
-        corr = jnp.exp2((m - m_new) * _LOG2E)
-        l = l * corr + jnp.sum(p, axis=-1)
-        acc = acc * corr[..., None] + jnp.einsum(
+        sc = jnp.where(mask[:, None, None, :, :], sc, dp.MASK_VALUE)
+        if k.shape[1] != t:
+            # pad-introduced phantom keys must carry NO mass (-inf), unlike
+            # user-invalid keys which keep the finite MASK_VALUE for bit
+            # parity with the naive path's masking
+            sc = jnp.where(pos_b[None, None, None, None, :] < t, sc,
+                           -jnp.inf)
+        # online log-domain update (Eq. 10 streamed, shared datapath step)
+        m, l, p, corr = dp.online_softmax_update(m, l, sc)
+        acc = acc * corr + jnp.einsum(
             "bkgst,btkh->bkgsh", p, vb.astype(jnp.float32))
-        return (m_new, l, acc), None
+        return (m, l, acc), None
 
-    m0 = jnp.full((b, kh, g, s_q), _NEG, jnp.float32)
-    l0 = jnp.zeros((b, kh, g, s_q), jnp.float32)
+    m0 = jnp.full((b, kh, g, s_q, 1), dp.MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s_q, 1), jnp.float32)
     acc0 = jnp.zeros((b, kh, g, s_q, hv), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nb))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]               # (B,K,G,S,hv)
+    out = dp.online_softmax_finish(l, acc)                     # (B,K,G,S,hv)
     return jnp.moveaxis(out, 3, 1).astype(v.dtype)             # (B,S,K,G,hv)
 
 
 def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:
-    """Blocked path when the scores tensor would exceed ~16 MB f32/head."""
-    return s_q * t > threshold and t % 512 == 0
+    """Blocked path when the scores tensor would exceed ~16 MB f32/head.
+
+    (No divisibility condition: non-divisible T pads to the block grid.)"""
+    return s_q * t > threshold
+
+
+dispatch.register_attention(
+    "flash",
+    lambda q, k, v, *, q_pos, kv_valid, causal, scale,
+    softmax_impl="float": flash_attention(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal, scale=scale))
+dispatch.set_attention_auto_rule(
+    lambda s_q, t: "flash" if use_flash(s_q, t) else "naive")

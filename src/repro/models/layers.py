@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.activations import get_activation
-from repro.core import softmax_unit as unit
+from repro.kernels import dispatch
+from repro.kernels import fused_ffn as _fused_ffn  # noqa: F401  (registers)
 
 Params = dict[str, Any]
 
@@ -108,18 +109,8 @@ def sinusoidal_pos_emb(n_pos: int, d: int, dtype=jnp.float32):
 # ---------------- softmax selection ----------------
 
 def softmax_fn(impl: str):
-    """Attention-softmax implementation switch.
-
-    'float'    : jax.nn.softmax (fp32 accumulate)
-    'dualmode' : the paper's unit, bit-accurate int path (jnp emulation —
-                 same numerics the Pallas kernel executes)
-    """
-    if impl == "float":
-        return lambda x: jax.nn.softmax(x, axis=-1)
-    if impl == "dualmode":
-        return lambda x: unit.softmax_dualmode(x.astype(jnp.float32),
-                                               axis=-1).astype(x.dtype)
-    raise ValueError(impl)
+    """Attention-softmax implementation switch (kernels/dispatch registry)."""
+    return dispatch.get_softmax(impl)
 
 
 # ---------------- MLPs ----------------
@@ -134,9 +125,29 @@ def mlp_init(key, d: int, d_ff: int, dtype, gated: bool = True,
     return p
 
 
-def mlp(p: Params, x, activation: str = "silu"):
+# activations the fused epilogue (datapath.pair_act, float log-domain
+# form) reproduces exactly; anything else — relu2, the bit-accurate
+# dualmode/igelu variants, erf-exact GELU — must stay on the dense path
+# rather than be silently approximated.
+_FUSABLE_ACT = {"gelu_tanh": "gelu", "gelu_via_softmax": "gelu",
+                "silu": "silu", "silu_via_softmax": "silu"}
+
+
+def mlp(p: Params, x, activation: str = "silu", impl: str = "dense"):
     """(Gated) MLP.  For gated GLU the activation applies to the gate path —
-    this is where the dual-mode unit's GELU/SiLU mode is used."""
+    this is where the dual-mode unit's GELU/SiLU mode is used.
+
+    ``impl`` resolves through the kernel registry: 'dense' is the plain
+    XLA graph; 'fused_pallas' runs the bias-free gated pair through the
+    fused matmul+epilogue kernel (kernels/fused_ffn.py) when the
+    activation is one the fused epilogue computes exactly."""
+    fused = dispatch.get_ffn(impl)
+    mode = _FUSABLE_ACT.get(activation)
+    if (fused is not None and mode is not None and "gate" in p
+            and "b" not in p["gate"] and "b" not in p["up"]):
+        x2 = x.reshape(-1, x.shape[-1])
+        h = fused(x2, p["gate"]["w"], p["up"]["w"], mode)
+        return linear(p["down"], h.reshape(*x.shape[:-1], h.shape[-1]))
     act = get_activation(activation)
     up = linear(p["up"], x)
     if "gate" in p:

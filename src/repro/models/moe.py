@@ -56,6 +56,7 @@ class MoESpec(NamedTuple):
     n_shared: int = 0         # DeepSeek-style always-on experts
     capacity_factor: float = 1.25
     activation: str = "silu"
+    ffn_impl: str = "dense"   # shared-expert MLP execution (dispatch registry)
     dispatch: str = "sort"    # 'sort' | 'dense'
     ep_pad: int = 0           # padded stack size (0 = n_experts)
     # inference capacity: truly dropless (cap=S) is exact for short
@@ -301,5 +302,5 @@ def moe_apply(p: Params, s: MoESpec, x, dropless: bool = False, axes=None):
     else:
         y = _moe_sort(p, s, x, gates, idx, dropless=dropless, axes=axes)
     if s.n_shared:
-        y = y + mlp(p["shared"], x, s.activation)
+        y = y + mlp(p["shared"], x, s.activation, impl=s.ffn_impl)
     return y, aux

@@ -38,14 +38,15 @@ def attn_spec(cfg: ModelConfig, causal: bool | None = None) -> AttnSpec:
                     qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias,
                     rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl,
                     causal=cfg.causal if causal is None else causal,
-                    use_rope=cfg.use_rope)
+                    use_rope=cfg.use_rope, attn_impl=cfg.attn_impl)
 
 
 def mla_spec(cfg: ModelConfig) -> MLASpec:
     m = cfg.mla
     return MLASpec(cfg.d_model, cfg.n_heads, m.q_lora_rank, m.kv_lora_rank,
                    m.nope_dim, m.rope_dim, m.v_dim,
-                   rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl)
+                   rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl,
+                   attn_impl=cfg.attn_impl)
 
 
 def mamba_spec(cfg: ModelConfig) -> MambaSpec:
@@ -60,8 +61,8 @@ def rwkv_spec(cfg: ModelConfig) -> RWKVSpec:
 def moe_spec(cfg: ModelConfig) -> MoESpec:
     m = cfg.moe
     return MoESpec(cfg.d_model, m.d_ff, m.n_experts, m.top_k, m.n_shared,
-                   m.capacity_factor, cfg.activation, cfg.moe_dispatch,
-                   ep_pad=m.ep_pad)
+                   m.capacity_factor, cfg.activation, cfg.ffn_impl,
+                   cfg.moe_dispatch, ep_pad=m.ep_pad)
 
 
 # ---------------- block ----------------
@@ -195,7 +196,7 @@ def block_apply(p: Params, cfg: ModelConfig, spec: LayerSpec, x, cache,
     if spec.ffn != "none":
         h = _pin(ctx, norm(p["norm2"], x, cfg.norm_eps), "full")
         if spec.ffn == "mlp":
-            x = x + mlp(p["ffn"], h, cfg.activation)
+            x = x + mlp(p["ffn"], h, cfg.activation, impl=cfg.ffn_impl)
         elif spec.ffn == "moe":
             o, aux = moe_apply(p["ffn"], moe_spec(cfg), h,
                                dropless=ctx.cached, axes=ctx.moe_axes)

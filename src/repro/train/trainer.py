@@ -27,14 +27,13 @@ from repro.checkpoint import CheckpointStore, latest_step
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data import SyntheticLM
 from repro.distributed import batch_pspec
+from repro.launch.mesh import auto_mesh
 from .step import (TrainState, jit_train_step, make_train_state,
                    state_pspecs)
 
 
 def default_mesh() -> Mesh:
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return auto_mesh((len(jax.devices()),), ("data",))
 
 
 class Trainer:

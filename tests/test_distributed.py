@@ -8,8 +8,8 @@ def test_pipeline_matches_sequential(subproc):
     code = '''
 import jax, jax.numpy as jnp
 from repro.distributed.pipeline import pipelined, bubble_fraction
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import auto_mesh
+mesh = auto_mesh((4,), ("stage",))
 def stage_fn(p, x):
     return jnp.tanh(x @ p["w"])
 params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 16, 16)) * 0.5}
@@ -49,8 +49,8 @@ def test_hlo_analyzer_sees_collectives(subproc):
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import analyze_hlo
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import auto_mesh
+mesh = auto_mesh((4,), ("data",))
 sh = NamedSharding(mesh, P("data"))
 def f(x):
     return jnp.sum(x)          # cross-device all-reduce

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.fixedpoint import (EXP_FRAC, I32, IN_FRAC, IN_MAX, IN_MIN,
                                    T_FRAC, dequantize, floor_log2,

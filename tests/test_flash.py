@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.models.attention import _sdpa
 from repro.models.flash import flash_attention, use_flash
@@ -77,6 +77,10 @@ def test_use_flash_threshold():
     assert use_flash(4096, 4096)            # train_4k: blocked
     assert use_flash(32768, 32768)          # prefill_32k: blocked
     assert not use_flash(64, 64)
+    # no divisibility condition: pad-and-slice handles ragged T, so long
+    # non-512-multiple contexts must NOT fall back to materialized scores
+    assert use_flash(4096, 4097)
+    assert use_flash(32768, 33000)
 
 
 def test_flash_grad_finite():

@@ -1,0 +1,195 @@
+"""Pallas blocked flash attention vs the naive oracle and the pure-JAX
+blocked path: the three implementations must agree (ISSUE 1 acceptance:
+within 1e-5 in interpret mode) across causal/non-causal, ragged validity,
+GQA groups, MLA-style head dims, and non-divisible sequence lengths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.models.attention import _naive_sdpa, _sdpa
+from repro.models.flash import flash_attention
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(b, s, t, k, g, h, hv=None):
+    hv = hv or h
+    q = jnp.asarray(RNG.normal(size=(b, s, k, g, h)), jnp.float32)
+    kk = jnp.asarray(RNG.normal(size=(b, t, k, h)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, t, k, hv)), jnp.float32)
+    return q, kk, v
+
+
+def _check_all_paths(q, k, v, q_pos, kv_valid, causal, atol=1e-5, block=16):
+    want = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal)
+    got_pl = flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                    causal=causal, interpret=True)
+    got_jx = flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                             causal=causal, block=block)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(got_jx), np.asarray(want),
+                               atol=atol)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_pallas_flash_matches_naive_and_jax_flash(causal):
+    q, k, v = _mk(2, 64, 128, 2, 3, 16)        # GQA: G=3 groups per KV head
+    q_pos = jnp.broadcast_to(jnp.arange(64, 128)[None], (2, 64))
+    kv_valid = jnp.ones((2, 128), bool)
+    _check_all_paths(q, k, v, q_pos, kv_valid, causal)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_pallas_flash_ragged_kv_valid(causal):
+    q, k, v = _mk(2, 32, 96, 1, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(64, 96)[None], (2, 32))
+    # every batch row has its own validity frontier + interior holes
+    kv_valid = jnp.asarray(RNG.random((2, 96)) > 0.3)
+    kv_valid = kv_valid.at[:, 0].set(True)
+    _check_all_paths(q, k, v, q_pos, kv_valid, causal)
+
+
+@pytest.mark.parametrize("s,t", [(17, 33), (5, 100), (130, 259)])
+def test_pallas_flash_non_divisible_lengths(s, t):
+    """S/T off the block grid exercise the pad-and-slice tiling policy
+    (for BOTH blocked paths: the Pallas kernel and pure-JAX flash, whose
+    odd-T handling pads KV instead of degrading to a 1-wide scan)."""
+    q, k, v = _mk(1, s, t, 2, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(t - s, t)[None], (1, s))
+    kv_valid = jnp.ones((1, t), bool)
+    want = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=True)
+    got = flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                 causal=True, interpret=True)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    got_jx = flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                             causal=True, block=16)
+    np.testing.assert_allclose(np.asarray(got_jx), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_pallas_flash_grad_matches_naive():
+    """The kernel's custom VJP (backward via the pure-JAX blocked path)
+    must match the naive path's gradient — the train path uses this."""
+    q, k, v = _mk(1, 32, 32, 1, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(32)[None], (1, 32))
+    kv_valid = jnp.ones((1, 32), bool)
+    g = jax.grad(lambda q_: flash_attention_pallas(
+        q_, k, v, q_pos=q_pos, kv_valid=kv_valid, interpret=True).sum())(q)
+    g_ref = jax.grad(lambda q_: _naive_sdpa(
+        q_, k, v, q_pos=q_pos, kv_valid=kv_valid).sum())(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
+
+
+def test_padded_phantom_keys_carry_no_mass():
+    """All real scores below MASK_VALUE (-30): pad-introduced phantom keys
+    would each absorb exp(-30 - m) mass if masked with the finite pad
+    value — they must score -inf so ragged-T parity holds even here."""
+    b, s, t, kh, g, h = 1, 8, 1500, 1, 1, 16
+    q = jnp.full((b, s, kh, g, h), 3.0, jnp.float32)
+    k = jnp.full((b, t, kh, h), -3.0, jnp.float32)     # scores = -36 < -30
+    v = jnp.asarray(RNG.normal(size=(b, t, kh, h)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(t - s, t)[None], (b, s))
+    kv_valid = jnp.ones((b, t), bool)
+    want = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=False)
+    got_pl = flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                    causal=False, interpret=True)
+    got_jx = flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                             causal=False, block=1024)   # pads 1500 -> 2048
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_jx), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_pallas_flash_mla_style_hv_differs():
+    q, k, v = _mk(2, 32, 32, 4, 1, 24, hv=12)   # qk head 24, v head 12
+    q_pos = jnp.broadcast_to(jnp.arange(32)[None], (2, 32))
+    kv_valid = jnp.ones((2, 32), bool)
+    _check_all_paths(q, k, v, q_pos, kv_valid, True, block=8)
+
+
+def test_pallas_flash_explicit_blocks_and_dtype():
+    q, k, v = _mk(1, 64, 64, 2, 2, 16)
+    q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    q_pos = jnp.broadcast_to(jnp.arange(64)[None], (1, 64))
+    kv_valid = jnp.ones((1, 64), bool)
+    got = flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                 block_q=16, block_kv=32, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    want = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+# ---------------- dispatch registry ----------------
+
+def test_registry_has_all_attention_impls():
+    for name in ("naive", "flash", "flash_pallas"):
+        assert callable(dispatch.get_attention(name)), name
+
+
+def test_resolve_auto_matches_use_flash_rule():
+    assert dispatch.resolve_attention("auto", 64, 64) == "naive"
+    assert dispatch.resolve_attention("auto", 4096, 4096) == "flash"
+    # ragged long T streams too (pad-and-slice removed the %512 guard)
+    assert dispatch.resolve_attention("auto", 32768, 33000) == "flash"
+    assert dispatch.resolve_attention("naive", 4096, 4096) == "naive"
+    with pytest.raises(ValueError):
+        dispatch.resolve_attention("no_such_impl", 8, 8)
+
+
+def test_registry_self_loads_providers(subproc):
+    """Resolving through a cold registry (a consumer that never imported
+    repro.models) must lazily import the providers rather than silently
+    fall back to 'naive' — needs a fresh interpreter, since in-process
+    the providers are already imported."""
+    out = subproc('''
+from repro.kernels import dispatch
+print("auto->", dispatch.resolve_attention("auto", 4096, 4096))
+print("pallas_callable->", callable(dispatch.get_attention("flash_pallas")))
+''', n_devices=1)
+    assert "auto-> flash" in out
+    assert "pallas_callable-> True" in out
+
+
+def test_sdpa_explicit_pallas_impl_matches_naive():
+    q, k, v = _mk(1, 48, 48, 2, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(48)[None], (1, 48))
+    kv_valid = jnp.ones((1, 48), bool)
+    got = _sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                softmax_impl="float", attn_impl="flash_pallas")
+    want = _sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                 softmax_impl="float", attn_impl="naive")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_registry_naive_honors_softmax_impl():
+    """The registry entry carries softmax_impl — resolving 'naive' through
+    dispatch must not silently lose the bit-accurate dualmode unit."""
+    q, k, v = _mk(1, 8, 8, 1, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+    kv_valid = jnp.ones((1, 8), bool)
+    kw = dict(q_pos=q_pos, kv_valid=kv_valid, causal=True, scale=None)
+    via_registry = dispatch.get_attention("naive")(
+        q, k, v, softmax_impl="dualmode", **kw)
+    direct = _sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                   softmax_impl="dualmode", attn_impl="naive")
+    np.testing.assert_array_equal(np.asarray(via_registry),
+                                  np.asarray(direct))
+    float_path = dispatch.get_attention("naive")(
+        q, k, v, softmax_impl="float", **kw)
+    assert not np.array_equal(np.asarray(via_registry),
+                              np.asarray(float_path))
+
+
+def test_ffn_registry():
+    assert dispatch.get_ffn("dense") is None
+    assert callable(dispatch.get_ffn("fused_pallas"))
+    with pytest.raises(ValueError):
+        dispatch.get_ffn("no_such_ffn")

@@ -30,6 +30,17 @@ def test_softmax_kernel_float_close(shape):
                                atol=3e-6)
 
 
+def test_softmax_kernel_float_pad_captures_no_mass():
+    """Float-path column padding must be -inf, not the finite MASK_VALUE:
+    rows whose true scores all sit below -30 must still sum to 1 on
+    non-lane-aligned shapes (regression: padded -30 columns dominated)."""
+    x = jnp.full((8, 200), -40.0, jnp.float32)
+    y = dk.softmax_pallas(x, precision="float", interpret=True)
+    np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.softmax_exact(x)), atol=3e-6)
+
+
 @pytest.mark.parametrize("mode", ["gelu", "silu"])
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("dtype", DTYPES)

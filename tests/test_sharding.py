@@ -77,6 +77,7 @@ from repro.data import SyntheticLM
 from repro.models.transformer import init_lm
 from repro.optim import adamw_init
 from repro.train.step import TrainState, make_train_step, state_pspecs
+from repro.launch.mesh import auto_mesh
 
 cfg = registry.reduced_config("qwen3-14b").replace(vocab=128)
 tcfg = TrainConfig(lr=1e-3, remat=True)
@@ -90,8 +91,7 @@ state = TrainState(params, adamw_init(params), {})
 s1, m1 = jax.jit(make_train_step(cfg, tcfg))(state, batch)
 
 # sharded
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = auto_mesh((2, 4), ("data", "model"))
 _, spec = state_pspecs(cfg, tcfg, mesh)
 sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
                   is_leaf=lambda x: isinstance(x, P))
@@ -127,6 +127,7 @@ from repro.data import SyntheticLM
 from repro.models.transformer import init_lm
 from repro.optim import adamw_init
 from repro.train.step import TrainState, make_train_step, state_pspecs
+from repro.launch.mesh import auto_mesh
 
 cfg = registry.reduced_config("granite-moe-3b-a800m").replace(vocab=128)
 tcfg = TrainConfig(lr=1e-3, remat=False)
@@ -136,8 +137,7 @@ batch = {"tokens": t, "labels": l}
 params = init_lm(jax.random.PRNGKey(0), cfg)
 state = TrainState(params, adamw_init(params), {})
 _, m1 = jax.jit(make_train_step(cfg, tcfg))(state, batch)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = auto_mesh((2, 4), ("data", "model"))
 _, spec = state_pspecs(cfg, tcfg, mesh)
 sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
                   is_leaf=lambda x: isinstance(x, P))

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import igelu, softmax_unit as unit
 from repro.core.activations import (gelu_exact, gelu_tanh, gelu_via_softmax,

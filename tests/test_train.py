@@ -111,8 +111,8 @@ import jax
 from repro.configs import registry
 from repro.configs.base import TrainConfig
 from repro.train import Trainer
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import auto_mesh
+mesh = auto_mesh((2, 4), ("data", "model"))
 cfg = registry.reduced_config("qwen1.5-0.5b").replace(vocab=96)
 tcfg = TrainConfig(lr=1e-3, total_steps=100, checkpoint_every=50,
                    checkpoint_dir={ck!r})
