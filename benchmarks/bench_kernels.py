@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.core import softmax_unit as unit
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention_int import flash_attention_pallas_int
 from repro.models.attention import _naive_sdpa
 from repro.models.flash import flash_attention
 
@@ -82,6 +83,56 @@ def main_flash(json_path: str | None = None) -> None:
         print(f"# wrote {os.path.abspath(json_path)}")
 
 
+def main_flash_int(json_path: str | None = None) -> None:
+    """Int-path shoot-out: the blocked bit-accurate kernel vs its two
+    neighbours — naive dual-mode (same words, whole-row, O(S*T) scores
+    materialized) and float blocked flash (same streaming, float words).
+
+    Records BENCH_flash_int.json: the cost of bit-exactness (3 KV sweeps)
+    next to what it replaces.  Off-TPU the Pallas number is interpret
+    mode — a correctness checkpoint, not a speed claim.  Also records the
+    max |naive_dualmode - flash_pallas_int| parity residual, which is
+    pure f32 prob@v reduction-order noise (the prob words are identical).
+    """
+    rng = np.random.default_rng(0)
+    b, s, k, g, h = 1, 512, 2, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, k, g, h)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    valid = jnp.ones((b, s), bool)
+
+    impls = {
+        "naive_dualmode": jax.jit(lambda q_, k_, v_: _naive_sdpa(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid,
+            softmax_impl="dualmode")),
+        "flash_jax_float": jax.jit(lambda q_, k_, v_: flash_attention(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid, block=128)),
+        "flash_pallas_int": lambda q_, k_, v_: flash_attention_pallas_int(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid),
+    }
+    results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
+                         "head_dim": h},
+               "backend": jax.default_backend(), "us_per_call": {}}
+    outs = {}
+    for name, fn in impls.items():
+        outs[name] = jax.block_until_ready(fn(q, kk, v))  # warm + capture
+        t = time_fn(fn, q, kk, v)
+        results["us_per_call"][name] = t
+        emit(f"kernels/flash_int_{name}_us", t,
+             f"backend={jax.default_backend()}")
+    parity = float(jnp.abs(outs["flash_pallas_int"]
+                           - outs["naive_dualmode"]).max())
+    results["parity_max_abs_vs_naive_dualmode"] = parity
+    emit("kernels/flash_int_parity_max_abs", parity * 1e6,
+         "combine reduction-order residual, x1e-6 (prob words identical)")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+
+
 if __name__ == "__main__":
     main()
     main_flash("BENCH_flash.json")
+    main_flash_int("BENCH_flash_int.json")

@@ -80,10 +80,16 @@ class ModelConfig:
     rwkv_lora_r: int = 64
     softmax_impl: str = "float"     # float | dualmode  (paper's unit)
     # attention execution strategy (kernels/dispatch.py registry):
-    #   auto         naive for short T, blocked online-softmax otherwise
-    #   naive        always materialize (S,T) scores
-    #   flash        pure-JAX blocked online softmax (models/flash.py)
-    #   flash_pallas Pallas blocked kernel (kernels/flash_attention.py)
+    #   auto             naive for short T, blocked online-softmax
+    #                    otherwise (dualmode -> the int blocked kernel)
+    #   naive            always materialize (S,T) scores; honors any
+    #                    softmax_impl
+    #   flash            pure-JAX blocked online softmax (models/flash.py)
+    #   flash_pallas     Pallas blocked kernel (kernels/flash_attention.py)
+    #   flash_pallas_int Pallas blocked BIT-ACCURATE unit
+    #                    (kernels/flash_attention_int.py); requires
+    #                    softmax_impl='dualmode'
+    # resolution refuses float blocked impls + softmax_impl='dualmode'
     attn_impl: str = "auto"
     # gated-MLP execution: dense | fused_pallas (kernels/fused_ffn.py)
     ffn_impl: str = "dense"

@@ -43,6 +43,15 @@ LOG2E_Q = int(round(math.log2(math.e) * (1 << _LOG2E_FRAC)))        # 5909
 GELU_A_Q = int(round(0.044715 * (1 << 16)))                         # cubic coeff
 GELU_C_Q = int(round(math.sqrt(2.0 / math.pi) * (1 << 14)))         # sqrt(2/pi)
 
+# Sentinel word for positions that must carry EXACTLY zero mass (the int
+# analogue of the float paths' -inf on tiling-phantom keys).  Any word w
+# with w - m <= -(32 << IN_FRAC) hits the input saturation of
+# ``_to_log2_domain`` and its exponential underflows the 14-bit output to
+# the literal 0 word, so it contributes nothing to the sum, the probs, or
+# (being far below any S5.10 word) the running max.  -2**20 keeps that
+# margin for every possible S5.10 max (>= IN_MIN) with int32 to spare.
+PHANTOM_Q = -(1 << 20)
+
 
 def _to_log2_domain(d, in_frac: int):
     """t = d * log2(e) at scale 2**-T_FRAC (d at scale 2**-in_frac, d<=0).
@@ -142,6 +151,72 @@ def silu_int(z_fx):
     """
     sig = _pair_softmax_first_int(z_fx.astype(I32), IN_FRAC + 1)
     return (z_fx.astype(I32) * sig) >> EXP_FRAC
+
+
+# --- blocked / online evaluation of normal mode -----------------------------
+#
+# The float flash recurrence corrects old partial sums by exp(m_old - m_new)
+# when the running max moves; that correction is NOT exact in the PWL int
+# domain (the 8-piece exp2 is not multiplicative), so a one-sweep online
+# rescale would change words.  What IS exact: the max fold and the
+# guard-shifted sum fold are associative int32 reductions, and the emit
+# step is elementwise given the final (m, l).  Streaming therefore runs
+# three KV sweeps — max, sum, emit — each an online fold whose carry
+# (m, then l) never leaves the int domain, and ANY blocking schedule
+# telescopes to the exact whole-row :func:`softmax_int` words.  These
+# three steps are jnp-traceable and shared verbatim by the Pallas kernel
+# body (``kernels/flash_attention_int.py``) and the pure-jnp blocked
+# oracle below.
+
+def online_max_int(m, x_blk, axis: int = -1):
+    """Sweep 1 fold: running row max.  Init carry with ``PHANTOM_Q``."""
+    return jnp.maximum(m, jnp.max(x_blk.astype(I32), axis=axis,
+                                  keepdims=True))
+
+
+def online_sum_int(l, m, x_blk, guard_shift: int, axis: int = -1):
+    """Sweep 2 fold: guard-shifted int32 row-sum carry (init 0).
+
+    ``m`` is the FINAL sweep-1 max; the guard shift bounds the carry for
+    rows up to 2**(16+guard_shift) elements exactly as in the whole-row
+    unit, so the blocked carry can never overflow int32 either.
+    """
+    t = _to_log2_domain(x_blk.astype(I32) - m, IN_FRAC)
+    e = _exp2_int(t)
+    return l + jnp.sum(e >> guard_shift, axis=axis, keepdims=True)
+
+
+def online_probs_int(m, l, x_blk, guard_shift: int):
+    """Sweep 3 emit: this block's probability words @ 2**-EXP_FRAC.
+
+    Elementwise given the final (m, l) — identical to the whole-row tail
+    of :func:`softmax_int` (same log2, same subtraction, same exp2).
+    """
+    t = _to_log2_domain(x_blk.astype(I32) - m, IN_FRAC)
+    log2s = _log2_int(jnp.maximum(l, 1), EXP_FRAC - guard_shift)
+    return _exp2_int(jnp.minimum(t - log2s, 0))
+
+
+def softmax_int_blocked(x_fx, block: int, guard_shift: int | None = None):
+    """Whole-row normal mode evaluated as the three blocked sweeps.
+
+    Pure-jnp driver over the last axis — the oracle that PROVES the
+    telescoping: tests pin its output bit-identical to
+    :func:`softmax_int` for any ``block`` (divisible or not).
+    """
+    n = x_fx.shape[-1]
+    if guard_shift is None:
+        guard_shift = max(0, n.bit_length() - 16)
+    x_fx = x_fx.astype(I32)
+    blocks = [x_fx[..., i:i + block] for i in range(0, n, block)]
+    m = jnp.full(x_fx.shape[:-1] + (1,), PHANTOM_Q, I32)
+    for b in blocks:
+        m = online_max_int(m, b)
+    l = jnp.zeros_like(m)
+    for b in blocks:
+        l = online_sum_int(l, m, b, guard_shift)
+    return jnp.concatenate(
+        [online_probs_int(m, l, b, guard_shift) for b in blocks], axis=-1)
 
 
 # --- float wrappers (quantize -> int unit -> dequantize) --------------------

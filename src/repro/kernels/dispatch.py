@@ -5,15 +5,23 @@ consumers, so model code never switches on strings itself:
 
   softmax    'float' | 'dualmode'            (attention probabilities)
   attention  'auto' | 'naive' | 'flash' | 'flash_pallas'
+             | 'flash_pallas_int'
   activation 'gelu_exact' | ... (delegates to repro.core.activations)
   ffn        'dense' | 'fused_pallas'        (gated-MLP execution)
 
 Providers register themselves at import time (``models/attention.py``
 registers 'naive', ``models/flash.py`` registers 'flash' and the 'auto'
 rule, ``kernels/flash_attention.py`` registers 'flash_pallas',
+``kernels/flash_attention_int.py`` registers 'flash_pallas_int',
 ``kernels/fused_ffn.py`` registers 'fused_pallas') — the registry itself
 imports nothing from ``models``, which keeps the layering acyclic:
 datapath -> kernels -> dispatch -> models.
+
+Attention resolution is softmax-aware: ``softmax_impl='dualmode'`` can
+never be silently dropped.  'auto' + dualmode routes blocked shapes to
+the bit-accurate Pallas int kernel; an EXPLICIT float blocked impl
+('flash' / 'flash_pallas') + dualmode raises instead of quietly running
+the fp32 datapath.
 """
 from __future__ import annotations
 
@@ -64,14 +72,21 @@ _ATTENTION: dict[str, Callable] = {}
 _ATTENTION_AUTO: list[Callable] = []   # single slot: (s_q, t) -> impl name
 
 
+# blocked impls that run the float log-domain datapath by construction —
+# resolution refuses to pair these with softmax_impl='dualmode' (the
+# bit-accurate words come from 'naive' or 'flash_pallas_int')
+FLOAT_BLOCKED_ATTENTION = frozenset({"flash", "flash_pallas"})
+
+
 def register_attention(name: str, fn: Callable) -> None:
     """fn(q, k, v, *, q_pos, kv_valid, causal, scale, softmax_impl)
     -> (B,S,K,G,hv).
 
-    Every implementation takes the full contract; the blocked/streamed
-    ones accept ``softmax_impl`` and ignore it (they are the float
-    log-domain form by construction — the bit-accurate 'dualmode' unit
-    needs whole score rows and only the naive path can honor it)."""
+    Every implementation takes the full contract.  'naive' honors any
+    ``softmax_impl``; the float blocked ones ('flash', 'flash_pallas')
+    are the float log-domain form by construction and are never resolved
+    with 'dualmode' (see :func:`resolve_attention`); 'flash_pallas_int'
+    IS the dual-mode unit streamed and requires 'dualmode'."""
     _ATTENTION[name] = fn
 
 
@@ -84,16 +99,44 @@ def _load_attention_providers() -> None:
     """Import the provider modules so their registrations run — callers
     that resolve through the registry directly (serve engine, notebooks)
     must not depend on having imported ``repro.models`` first."""
-    import repro.kernels.flash_attention  # noqa: F401
-    import repro.models.attention         # noqa: F401  (naive + flash + rule)
+    import repro.kernels.flash_attention      # noqa: F401
+    import repro.kernels.flash_attention_int  # noqa: F401
+    import repro.models.attention             # noqa: F401  (naive+flash+rule)
 
 
-def resolve_attention(impl: str, s_q: int, t_kv: int) -> str:
-    """Resolve 'auto' to a concrete implementation name."""
+def resolve_attention(impl: str, s_q: int, t_kv: int,
+                      softmax_impl: str = "float") -> str:
+    """Resolve 'auto' to a concrete implementation name.
+
+    Softmax-aware: 'dualmode' is a numerics contract, so resolution
+    guarantees the bit-accurate unit actually executes —
+
+      * 'auto' + 'dualmode': short rows stay 'naive' (whole-row unit);
+        shapes the auto rule would stream go to 'flash_pallas_int'
+        (the unit's blocked three-sweep kernel), never a float path.
+      * explicit 'flash'/'flash_pallas' + 'dualmode': ValueError — these
+        run the float datapath by construction, and silently dropping
+        the unit is exactly the bug this guard exists to prevent.
+      * explicit 'flash_pallas_int' + anything but 'dualmode': ValueError
+        (the kernel is the unit; it cannot produce float-path words).
+    """
     if impl == "auto" and not _ATTENTION_AUTO:
         _load_attention_providers()
     if impl == "auto":
-        return _ATTENTION_AUTO[0](s_q, t_kv) if _ATTENTION_AUTO else "naive"
+        impl = _ATTENTION_AUTO[0](s_q, t_kv) if _ATTENTION_AUTO else "naive"
+        if softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
+            impl = "flash_pallas_int"
+    elif softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
+        raise ValueError(
+            f"attn_impl={impl!r} runs the float log-domain datapath and "
+            "cannot honor softmax_impl='dualmode' — use attn_impl='auto' "
+            "(routes to 'naive'/'flash_pallas_int'), 'naive', or "
+            "'flash_pallas_int'")
+    if impl == "flash_pallas_int" and softmax_impl != "dualmode":
+        raise ValueError(
+            "attn_impl='flash_pallas_int' is the bit-accurate dual-mode "
+            f"unit; softmax_impl={softmax_impl!r} would be ignored — set "
+            "softmax_impl='dualmode' (or pick a float attention impl)")
     if impl not in _ATTENTION:
         _load_attention_providers()
     if impl not in _ATTENTION:

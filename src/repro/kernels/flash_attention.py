@@ -37,6 +37,28 @@ from . import dispatch, tiling
 _STATE_LANES = 128   # lane width of the (m, l) scratch rows
 
 
+def attention_blockspecs(bq: int, bkv: int, g: int, hd: int, hv: int):
+    """(in_specs for (q_pos, kv_valid, q, k, v), out_spec) shared by every
+    flash kernel flavor.  Index maps take (b, head, q_tile, *rest) with
+    the kv tile as the LAST grid dim, so the same specs serve the float
+    kernel's 4D grid and the int kernel's 5D (extra sweep dim) grid.
+    """
+    in_specs = [
+        pl.BlockSpec((1, bq), lambda b_, h_, qi, *r: (b_, qi)),
+        pl.BlockSpec((1, bkv), lambda b_, h_, qi, *r: (b_, r[-1])),
+        pl.BlockSpec((1, bq, 1, 1, hd),
+                     lambda b_, h_, qi, *r: (b_, qi, h_ // g, h_ % g, 0)),
+        pl.BlockSpec((1, bkv, 1, hd),
+                     lambda b_, h_, qi, *r: (b_, r[-1], h_ // g, 0)),
+        pl.BlockSpec((1, bkv, 1, hv),
+                     lambda b_, h_, qi, *r: (b_, r[-1], h_ // g, 0)),
+    ]
+    out_spec = pl.BlockSpec(
+        (1, bq, 1, 1, hv),
+        lambda b_, h_, qi, *r: (b_, qi, h_ // g, h_ % g, 0))
+    return in_specs, out_spec
+
+
 def _flash_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
                 m_ref, l_ref, acc_ref, *, block_kv: int, causal: bool,
                 t_kv: int):
@@ -77,8 +99,6 @@ def _flash_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, :, 0, 0, :] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "block_q", "block_kv", "interpret"))
 def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
                            scale: float | None = None,
                            block_q: int | None = None,
@@ -86,50 +106,54 @@ def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
                            interpret: bool | None = None):
     """Blocked flash attention; see module docstring for shapes/masking.
 
+    ``scale`` rides as a TRACED operand (folded into the q pre-scale
+    before the kernel), so distinct head-dim/user scales share one
+    compilation — only genuinely structural args (blocks, causal,
+    interpret) are jit-static.
+
     Differentiable: Pallas has no AD rule for the streamed body, so the
     backward pass recomputes through the pure-JAX blocked path
     (models/flash.py) — the identical online-softmax arithmetic, just
     unfused.  Dedicated dq/dk/dv Pallas kernels are a ROADMAP item.
     """
-    b, s_q, kh, g, hd = q.shape
-    t = k.shape[1]
-    hv = v.shape[-1]
+    hd = q.shape[-1]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     scale = (1.0 / hd ** 0.5) if scale is None else scale
-
-    bq, bkv = tiling.attention_blocks(s_q, t)
+    bq, bkv = tiling.attention_blocks(q.shape[1], k.shape[1])
     bq = bq if block_q is None else block_q
     bkv = bkv if block_kv is None else block_kv
+    return _flash_pallas_jit(q, k, v, q_pos, kv_valid,
+                             jnp.float32(scale), causal=causal, block_q=bq,
+                             block_kv=bkv, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_kv", "interpret"))
+def _flash_pallas_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
+                      block_q: int, block_kv: int, interpret: bool):
+    b, s_q, kh, g, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]
+    bq, bkv = block_q, block_kv
+    # fold the traced scale into q HERE, outside the custom_vjp, so (a) no
+    # tracer is closed over by fwd/bwd and (b) d(scale) flows through the
+    # multiply for free while the kernel itself stays scale-free
+    q = q.astype(jnp.float32) * scale
 
     def forward(q_, k_, v_, q_pos_, kv_valid_):
-        qf, _ = tiling.pad_dim(q_.astype(jnp.float32) * scale, 1, bq)
-        qp, _ = tiling.pad_dim(q_pos_.astype(jnp.int32), 1, bq)
-        kf, _ = tiling.pad_dim(k_, 1, bkv)
-        vf, _ = tiling.pad_dim(v_, 1, bkv)
-        valid, _ = tiling.pad_dim(kv_valid_.astype(jnp.int32), 1, bkv,
-                                  value=0)
+        qf, qp, kf, vf, valid = tiling.pad_attention_operands(
+            q_, q_pos_, k_, v_, kv_valid_, bq, bkv)
         s_p, t_p = qf.shape[1], kf.shape[1]
 
+        in_specs, out_spec = attention_blockspecs(bq, bkv, g, hd, hv)
         grid = (b, kh * g, s_p // bq, t_p // bkv)
         out = pl.pallas_call(
             functools.partial(_flash_body, block_kv=bkv, causal=causal,
                               t_kv=t),
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, bq), lambda b_, h_, qi, kj: (b_, qi)),
-                pl.BlockSpec((1, bkv), lambda b_, h_, qi, kj: (b_, kj)),
-                pl.BlockSpec((1, bq, 1, 1, hd),
-                             lambda b_, h_, qi, kj:
-                             (b_, qi, h_ // g, h_ % g, 0)),
-                pl.BlockSpec((1, bkv, 1, hd),
-                             lambda b_, h_, qi, kj: (b_, kj, h_ // g, 0)),
-                pl.BlockSpec((1, bkv, 1, hv),
-                             lambda b_, h_, qi, kj: (b_, kj, h_ // g, 0)),
-            ],
-            out_specs=pl.BlockSpec(
-                (1, bq, 1, 1, hv),
-                lambda b_, h_, qi, kj: (b_, qi, h_ // g, h_ % g, 0)),
+            in_specs=in_specs,
+            out_specs=out_spec,
             out_shape=jax.ShapeDtypeStruct((b, s_p, kh, g, hv), v_.dtype),
             scratch_shapes=[
                 pltpu.VMEM((bq, _STATE_LANES), jnp.float32),  # running max m
@@ -155,10 +179,12 @@ def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
         import numpy as np
         from repro.models.flash import flash_attention as flash_ref
         q_, k_, v_, q_pos_, kv_valid_ = res
+        # q_ is already pre-scaled, so the recompute runs at scale=1.0 (a
+        # static float — the traced scale operand must not be closed over)
         _, vjp = jax.vjp(
             lambda a, b_, c: flash_ref(a, b_, c, q_pos=q_pos_,
                                        kv_valid=kv_valid_, causal=causal,
-                                       scale=scale), q_, k_, v_)
+                                       scale=1.0), q_, k_, v_)
         f0 = jax.dtypes.float0
         return (*vjp(gy), np.zeros(q_pos_.shape, f0),
                 np.zeros(kv_valid_.shape, f0))
@@ -169,6 +195,11 @@ def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float"):
+    if softmax_impl == "dualmode":
+        raise ValueError(
+            "attn_impl='flash_pallas' is the float blocked kernel and "
+            "cannot honor softmax_impl='dualmode' — use 'naive' or "
+            "'flash_pallas_int'")
     return flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
                                   causal=causal, scale=scale)
 

@@ -1,0 +1,191 @@
+"""Pallas blocked flash attention on the BIT-ACCURATE int datapath.
+
+``kernels/flash_attention.py`` streams the float log-domain form of
+Eq. (10); this sibling streams the S5.10/int32 unit itself
+(``repro.core.softmax_unit``), so the paper's dual-mode numerics run on
+blocked shapes instead of silently degrading to fp32 the moment the
+dispatcher picks a streamed path.
+
+Why three KV sweeps: the float flash recurrence rescales stale partial
+sums by exp(m_old - m_new) when the running max moves.  That correction
+is exact in float algebra but NOT in the unit's PWL arithmetic (the
+8-piece exp2 is not multiplicative), so a one-sweep online rescale would
+change words.  The unit's max fold and guard-shifted sum fold are however
+associative int32 reductions, and the emit step is elementwise given the
+final (m, l) — so the kernel runs the online recurrence as three
+sequential sweeps over the same KV tiles
+
+    sweep 0  m <- max(m, max(block))            int32 S5.10 carry
+    sweep 1  l <- l + sum(exp2 words >> guard)  int32 guard-shifted carry
+    sweep 2  acc <- acc + dequant(prob words) @ v
+
+with (m, l, acc) in VMEM scratch, and telescopes to the EXACT whole-row
+:func:`repro.core.softmax_unit.softmax_int` words (the fold steps are
+``online_max_int`` / ``online_sum_int`` / ``online_probs_int`` — shared
+verbatim with the pure-jnp blocked oracle that tests pin bit-identical).
+KV is read 3x per q tile: that is the bandwidth price of bit-exactness,
+fine for the decode/accuracy-study shapes this path serves.
+
+Shapes, masking, and tiling match the float kernel: q (B,S,K,G,h),
+k (B,T,K,h), v (B,T,K,hv) -> (B,S,K,G,hv); user-invalid or causally
+masked keys score ``datapath.MASK_VALUE`` BEFORE quantization (the same
+finite word the naive dual-mode path sees), while tiling-phantom keys
+take the ``PHANTOM_Q`` sentinel whose exponential is the literal 0 word.
+Scores quantize as ``quantize((q . k) * scale)`` in exactly the naive
+path's operation order, so the S5.10 score words — and therefore the
+probability words — are identical to naive ``softmax_impl='dualmode'``.
+
+Forward-only: the int unit is step-quantized (gradients vanish a.e.), so
+no VJP is defined and differentiating through this kernel raises.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import softmax_unit as unit
+from repro.core.fixedpoint import EXP_FRAC, I32, dequantize, quantize
+
+from . import datapath as dp
+from . import dispatch, tiling
+from .flash_attention import _STATE_LANES, attention_blockspecs
+
+
+def _flash_int_body(scale_ref, qpos_ref, valid_ref, q_ref, k_ref, v_ref,
+                    o_ref, m_ref, l_ref, acc_ref, *, block_kv: int,
+                    causal: bool, t_kv: int, guard_shift: int):
+    phase = pl.program_id(3)
+    kj = pl.program_id(4)
+
+    @pl.when((phase == 0) & (kj == 0))
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, unit.PHANTOM_Q)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, 0, :].astype(jnp.float32)          # (bq, h) UNscaled
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, h)
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bkv)
+    s = s * scale_ref[0, 0]          # naive order: (q . k) * scale, THEN mask
+
+    mask = valid_ref[...] != 0                            # (1, bkv) -> bcast
+    kv_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if causal:
+        q_pos = qpos_ref[...].reshape(-1, 1)              # (bq, 1)
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, dp.MASK_VALUE)
+    sq = quantize(s)                                      # S5.10 score words
+    # tiling-padded phantom keys carry EXACTLY zero mass (int -inf
+    # analogue); user-invalid keys keep the finite quantized MASK_VALUE
+    # word so masking matches the naive dual-mode path bitwise
+    sq = jnp.where(kv_pos < t_kv, sq, I32(unit.PHANTOM_Q))
+
+    m = m_ref[:, :1]                                      # (bq, 1)
+
+    @pl.when(phase == 0)
+    def _():
+        m_ref[...] = jnp.broadcast_to(unit.online_max_int(m, sq),
+                                      m_ref.shape)
+
+    @pl.when(phase == 1)
+    def _():
+        l_new = unit.online_sum_int(l_ref[:, :1], m, sq, guard_shift)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(phase == 2)
+    def _():
+        p = unit.online_probs_int(m, l_ref[:, :1], sq, guard_shift)
+        pf = dequantize(p, EXP_FRAC)                      # exact prob floats
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)        # (bkv, hv)
+        acc_ref[...] = acc_ref[...] + jnp.dot(
+            pf, vb, preferred_element_type=jnp.float32)
+
+    @pl.when((phase == 2) & (kj == pl.num_programs(4) - 1))
+    def _():
+        o_ref[0, :, 0, 0, :] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_kv", "interpret"))
+def _flash_int_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
+                   block_q: int, block_kv: int, interpret: bool):
+    b, s_q, kh, g, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]
+    bq, bkv = block_q, block_kv
+    # same guard as the whole-row unit applies for an n=t row
+    guard_shift = max(0, t.bit_length() - 16)
+
+    qf, qp, kf, vf, valid = tiling.pad_attention_operands(
+        q, q_pos, k, v, kv_valid, bq, bkv)
+    s_p, t_p = qf.shape[1], kf.shape[1]
+    scale2d = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    in_specs, out_spec = attention_blockspecs(bq, bkv, g, hd, hv)
+    # only the emit sweep reads v: pin its block index to 0 during the
+    # max/sum sweeps (ph // 2 = 0, 0, 1) so v HBM->VMEM traffic stays ~1x
+    # instead of riding every kv step of all three sweeps
+    in_specs[4] = pl.BlockSpec(
+        (1, bkv, 1, hv),
+        lambda b_, h_, qi, ph, kj: (b_, kj * (ph // 2), h_ // g, 0))
+    grid = (b, kh * g, s_p // bq, 3, t_p // bkv)          # 3 = sweeps
+    out = pl.pallas_call(
+        functools.partial(_flash_int_body, block_kv=bkv, causal=causal,
+                          t_kv=t, guard_shift=guard_shift),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda *idx: (0, 0))] + in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s_p, kh, g, hv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _STATE_LANES), jnp.int32),    # running max m
+            pltpu.VMEM((bq, _STATE_LANES), jnp.int32),    # guard-shifted l
+            pltpu.VMEM((bq, hv), jnp.float32),            # weighted-v acc
+        ],
+        interpret=interpret,
+    )(scale2d, qp, valid, qf, kf, vf)
+    return tiling.unpad(out, 1, s_q)
+
+
+def flash_attention_pallas_int(q, k, v, *, q_pos, kv_valid,
+                               causal: bool = True,
+                               scale: float | None = None,
+                               block_q: int | None = None,
+                               block_kv: int | None = None,
+                               interpret: bool | None = None):
+    """Blocked dual-mode attention; see module docstring.
+
+    Output is the naive ``softmax_impl='dualmode'`` attention with the
+    identical int probability words; only the final f32 prob@v
+    accumulation order differs (blocked vs whole-row sum).
+    """
+    hd = q.shape[-1]
+    t = k.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = (1.0 / hd ** 0.5) if scale is None else scale
+    bq, bkv = tiling.attention_blocks(q.shape[1], t)
+    bq = bq if block_q is None else block_q
+    bkv = bkv if block_kv is None else block_kv
+    return _flash_int_jit(q, k, v, q_pos, kv_valid,
+                          jnp.float32(scale), causal=causal, block_q=bq,
+                          block_kv=bkv, interpret=interpret)
+
+
+def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
+                     softmax_impl="dualmode"):
+    if softmax_impl != "dualmode":
+        raise ValueError(
+            "attn_impl='flash_pallas_int' IS the bit-accurate unit; it "
+            f"cannot honor softmax_impl={softmax_impl!r} (use 'dualmode', "
+            "or a float impl: 'flash'/'flash_pallas')")
+    return flash_attention_pallas_int(q, k, v, q_pos=q_pos,
+                                      kv_valid=kv_valid, causal=causal,
+                                      scale=scale)
+
+
+dispatch.register_attention("flash_pallas_int", _attention_entry)

@@ -100,3 +100,18 @@ def attention_blocks(s_q: int, t_kv: int) -> tuple[int, int]:
     with kv LANE-aligned (it is the score tile's minor dim).
     """
     return fit_block(s_q, SUBLANE, 128), fit_block(t_kv, LANE, 512)
+
+
+def pad_attention_operands(q, q_pos, k, v, kv_valid, bq: int, bkv: int):
+    """Pad the five blocked-attention operands up to the (bq, bkv) grid.
+
+    One definition for every flash kernel flavor: q/q_pos pad along the
+    query axis, k/v/kv_valid along the kv axis (validity pads with 0 so
+    padded keys are invalid).  Returns the padded operands.
+    """
+    qf, _ = pad_dim(q, 1, bq)
+    qp, _ = pad_dim(q_pos.astype(jnp.int32), 1, bq)
+    kf, _ = pad_dim(k, 1, bkv)
+    vf, _ = pad_dim(v, 1, bkv)
+    valid, _ = pad_dim(kv_valid.astype(jnp.int32), 1, bkv, value=0)
+    return qf, qp, kf, vf, valid

@@ -14,8 +14,9 @@ import jax.numpy as jnp
 
 from repro.kernels import datapath as dp
 from repro.kernels import dispatch
-from repro.kernels import flash_attention as _pallas_flash  # noqa: F401
-from . import flash as _flash                               # noqa: F401
+from repro.kernels import flash_attention as _pallas_flash      # noqa: F401
+from repro.kernels import flash_attention_int as _pallas_int    # noqa: F401
+from . import flash as _flash                                   # noqa: F401
 from .layers import (Params, apply_rope, linear, linear_init, rmsnorm,
                      rmsnorm_init)
 
@@ -31,7 +32,7 @@ class AttnSpec(NamedTuple):
     softmax_impl: str = "float"
     causal: bool = True
     use_rope: bool = True     # Jamba attends without positional encoding
-    attn_impl: str = "auto"   # auto | naive | flash | flash_pallas
+    attn_impl: str = "auto"   # auto|naive|flash|flash_pallas|flash_pallas_int
 
 
 class MLASpec(NamedTuple):
@@ -87,13 +88,16 @@ def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
     'auto' streams KV through the blocked online-softmax path when the
     (S,T) score tile is too large to materialize (models/flash.py, or the
     Pallas kernel with attn_impl='flash_pallas') — same log-domain
-    arithmetic as the paper's unit, in streaming form.  The bit-accurate
-    dual-mode unit needs whole score rows, so softmax_impl='dualmode'
-    applies on the naive path (short T: decode steps, encoder blocks) and
-    falls back to the float log-domain form when blocked.
+    arithmetic as the paper's unit, in streaming form.  Resolution is
+    softmax-aware: softmax_impl='dualmode' runs the bit-accurate unit
+    whole-row on the naive path (short T: decode steps, encoder blocks)
+    and through the blocked three-sweep int kernel
+    (attn_impl='flash_pallas_int') when streamed — it is never silently
+    dropped to the float datapath.
     """
     s_q, t = q.shape[1], k.shape[1]
-    impl = dispatch.resolve_attention(attn_impl, s_q, t)
+    impl = dispatch.resolve_attention(attn_impl, s_q, t,
+                                      softmax_impl=softmax_impl)
     return dispatch.get_attention(impl)(
         q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
         scale=scale, softmax_impl=softmax_impl)

@@ -13,8 +13,10 @@ cites): carrying (m, l) per row IS the streaming evaluation of Eq. 10.
 The inner step is therefore ``repro.kernels.datapath.
 online_softmax_update`` — the unit's own arithmetic, streamed, and the
 SAME function the Pallas kernel body executes (kernels/flash_attention.py
-is this loop with a Pallas grid around it).  (The bit-accurate int path
-needs whole rows and stays on the naive path used for short T.)
+is this loop with a Pallas grid around it).  (This module is the FLOAT
+form; the bit-accurate int unit streams through the three-sweep kernel
+in kernels/flash_attention_int.py — dispatch never pairs 'dualmode' with
+this float path.)
 
 Shapes: q (B,S,K,G,h), k (B,T,K,h), v (B,T,K,hv) -> out (B,S,K,G,hv).
 hv may differ from h (MLA).  Masking: kv position t attends iff
@@ -87,10 +89,16 @@ def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:
     return s_q * t > threshold
 
 
-dispatch.register_attention(
-    "flash",
-    lambda q, k, v, *, q_pos, kv_valid, causal, scale,
-    softmax_impl="float": flash_attention(
-        q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal, scale=scale))
+def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
+                     softmax_impl="float"):
+    if softmax_impl == "dualmode":
+        raise ValueError(
+            "attn_impl='flash' is the float blocked path and cannot honor "
+            "softmax_impl='dualmode' — use 'naive' or 'flash_pallas_int'")
+    return flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                           causal=causal, scale=scale)
+
+
+dispatch.register_attention("flash", _attention_entry)
 dispatch.set_attention_auto_rule(
     lambda s_q, t: "flash" if use_flash(s_q, t) else "naive")

@@ -13,6 +13,13 @@ queued request whenever a slot frees, splice its prefilled caches into the
 batched cache tree at the slot index, sample, retire on EOS/max_tokens.
 `make_prefill_step`/`make_decode_step` are also what the multi-pod dry-run
 lowers for the decode/prefill shape cells.
+
+Attention impls are selected PER PHASE through the kernel dispatch
+registry: prefill runs wide q tiles (the blocked/flash paths pay off),
+decode runs s_q=1 rows (whole-row naive keeps the dual-mode unit exact
+and cheap).  Each phase's impl is resolved once at engine construction at
+the phase's representative shape, so the two compiled programs pin their
+own kernels instead of both trailing the model default.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch
 from repro.models.transformer import encoder_apply, init_caches, lm_apply
 
 Params = Any
@@ -110,6 +118,8 @@ class ServeEngine:
                  n_slots: int = 4, max_seq: int = 512,
                  eos_id: int | None = None, dtype=jnp.float32,
                  prefill_buckets: tuple[int, ...] = (32, 128, 512),
+                 prefill_attn_impl: str | None = None,
+                 decode_attn_impl: str | None = None,
                  seed: int = 0):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
@@ -124,8 +134,24 @@ class ServeEngine:
             s.mixer in ("mamba", "rwkv")
             for s in tuple(cfg.pattern) + tuple(cfg.prefix))
         self.caches = init_caches(cfg, n_slots, max_seq, dtype)
-        self._prefill = jax.jit(make_prefill_step(cfg))
-        self._decode = jax.jit(make_decode_step(cfg))
+        # per-phase attention impls, resolved once through the dispatch
+        # registry at each phase's representative shape (prefill: widest
+        # q tile vs the full cache; decode: one q row vs the full cache).
+        # None defers to cfg.attn_impl, so a config that pins a concrete
+        # impl keeps it for both phases; resolution is softmax-aware, so
+        # a dualmode config routes to the bit-accurate paths instead of
+        # silently running the float ones.
+        prefill_sq = max_seq if self._exact_prefill else self.buckets[-1]
+        self.prefill_attn_impl = dispatch.resolve_attention(
+            prefill_attn_impl or cfg.attn_impl, prefill_sq, max_seq,
+            softmax_impl=cfg.softmax_impl)
+        self.decode_attn_impl = dispatch.resolve_attention(
+            decode_attn_impl or cfg.attn_impl, 1, max_seq,
+            softmax_impl=cfg.softmax_impl)
+        self._prefill = jax.jit(make_prefill_step(
+            cfg.replace(attn_impl=self.prefill_attn_impl)))
+        self._decode = jax.jit(make_decode_step(
+            cfg.replace(attn_impl=self.decode_attn_impl)))
         self._slots = [_Slot() for _ in range(n_slots)]
         self._queue: list[Request] = []
         self._key = jax.random.PRNGKey(seed)
@@ -136,9 +162,17 @@ class ServeEngine:
     # ---- host-side bookkeeping ----
 
     def submit(self, req: Request) -> None:
+        # validate at submission so an over-long prompt fails fast instead
+        # of being popped mid-run (both prefill flavors: the bucketed path
+        # AND the exact-length mamba/rwkv path, which used to skip every
+        # length check and silently overrun the cache)
+        self._bucket(len(req.prompt))
         self._queue.append(req)
 
     def _bucket(self, n: int) -> int:
+        if n > self.max_seq:
+            raise ValueError(f"prompt length {n} exceeds max_seq "
+                             f"{self.max_seq}")
         if self._exact_prefill:
             return n
         for b in self.buckets:
@@ -149,6 +183,13 @@ class ServeEngine:
 
     def _admit(self) -> None:
         for i, slot in enumerate(self._slots):
+            # max_new=0 requests finish with an EMPTY completion — never
+            # consume a slot, a prefill, or emit the prefill-sampled token
+            # (which used to be appended unconditionally)
+            while self._queue and self._queue[0].max_new <= 0:
+                done = self._queue.pop(0)
+                self.finished[done.rid] = []
+                self.stats["admitted"] += 1
             if not self._queue:
                 return
             if not slot.free:

@@ -1,0 +1,231 @@
+"""Bit-accurate int flash attention (ISSUE 2 tentpole).
+
+Two layers of guarantee, tested separately:
+
+  1. WORDS — the blocked three-sweep int recurrence (max fold, guard-
+     shifted sum fold, elementwise emit) telescopes to the EXACT whole-row
+     ``softmax_int`` words for any blocking, and the Pallas kernel carries
+     those words end-to-end (proved with an identity-matrix v, which turns
+     the output into the raw probability words: no float accumulation).
+  2. OUTPUTS — with a real v the only remaining difference vs the naive
+     dual-mode path is f32 prob@v reduction order (blocked vs whole-row),
+     bounded at ~1e-7 of the row mass.
+
+Plus the dispatch guarantee: softmax_impl='dualmode' can no longer be
+silently dropped by ANY attention impl resolution.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import softmax_unit as unit
+from repro.core.fixedpoint import quantize
+from repro.kernels import dispatch
+from repro.kernels.flash_attention_int import flash_attention_pallas_int
+from repro.models.attention import _naive_sdpa, _sdpa
+
+RNG = np.random.default_rng(11)
+
+
+def _mk(b, s, t, k, g, h, hv=None, scale=1.0):
+    hv = hv or h
+    q = jnp.asarray(RNG.normal(size=(b, s, k, g, h)) * scale, jnp.float32)
+    kk = jnp.asarray(RNG.normal(size=(b, t, k, h)) * scale, jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, t, k, hv)), jnp.float32)
+    return q, kk, v
+
+
+# ---------------- the telescoping proof (pure int words) ----------------
+
+@pytest.mark.parametrize("n,block", [(8, 8), (33, 8), (100, 16), (7, 3),
+                                     (1000, 128), (513, 512)])
+def test_blocked_int_recurrence_telescopes_bitexact(n, block):
+    """Any blocking of the three-sweep recurrence == whole-row words,
+    including non-divisible tails and rows long enough to engage the
+    guard shift path bound."""
+    x = quantize(jnp.asarray(RNG.normal(size=(16, n)) * 5, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(unit.softmax_int_blocked(x, block)),
+        np.asarray(unit.softmax_int(x)))
+
+
+def test_blocked_int_guard_shift_long_row():
+    """Rows past 2**16 elements force guard_shift > 0 in the whole-row
+    unit; the blocked carry must use the identical guard so the int32
+    accumulator never overflows and words stay pinned."""
+    n = (1 << 16) + 17                      # bit_length 17 -> guard 1
+    x = quantize(jnp.asarray(RNG.normal(size=(2, n)) * 3, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(unit.softmax_int_blocked(x, 1 << 12)),
+        np.asarray(unit.softmax_int(x)))
+
+
+def test_phantom_word_carries_exactly_zero_mass():
+    """The PHANTOM_Q sentinel must be invisible: appending phantoms to a
+    row changes neither the max, the sum carry, nor any prob word."""
+    x = quantize(jnp.asarray(RNG.normal(size=(4, 37)) * 5, jnp.float32))
+    xp = jnp.concatenate(
+        [x, jnp.full((4, 27), unit.PHANTOM_Q, jnp.int32)], axis=-1)
+    # guard from the REAL row length, like the kernel computes it
+    g = max(0, 37 .bit_length() - 16)
+    got = unit.softmax_int_blocked(xp, 16, guard_shift=g)[:, :37]
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(unit.softmax_int(x, guard_shift=g)))
+    assert int(jnp.abs(
+        unit.softmax_int_blocked(xp, 16, guard_shift=g)[:, 37:]).max()) == 0
+
+
+# ---------------- the Pallas kernel vs the naive dual-mode oracle -------
+
+def _ids(b, t, k):
+    """v = per-head identity: attention output IS the dequantized
+    probability words (each output element one p*1.0 product, every other
+    term an exact float zero) — a bitwise probe through the kernel."""
+    eye = jnp.eye(t, dtype=jnp.float32)
+    return jnp.broadcast_to(eye[None, :, None, :], (b, t, k, t))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_kernel_prob_words_bit_identical_to_naive_dualmode(causal):
+    b, s, t, k, g, h = 2, 24, 40, 2, 2, 8
+    q, kk, _ = _mk(b, s, t, k, g, h)
+    v = _ids(b, t, k)
+    q_pos = jnp.broadcast_to(jnp.arange(t - s, t)[None], (b, s))
+    kv_valid = jnp.asarray(RNG.random((b, t)) > 0.25)
+    want = _naive_sdpa(q, kk, v, q_pos=q_pos, kv_valid=kv_valid,
+                       causal=causal, softmax_impl="dualmode")
+    # small explicit blocks force REAL streaming (3 sweeps x 3 kv tiles);
+    # identity-v keeps the cross-block accumulation exact (all-zero terms)
+    got = flash_attention_pallas_int(q, kk, v, q_pos=q_pos,
+                                     kv_valid=kv_valid, causal=causal,
+                                     block_q=8, block_kv=16,
+                                     interpret=True)
+    # SAME int32/S5.10-pipeline words: exact equality, not allclose
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 128, 2, 3, 16, None),    # GQA: G=3 query groups per KV head
+    (2, 32, 32, 4, 1, 24, 12),       # MLA-style: v head dim != qk head dim
+    (1, 17, 33, 2, 2, 8, None),      # non-divisible S/T (tiling pad path)
+    (1, 5, 100, 1, 2, 8, None),
+])
+def test_kernel_output_matches_naive_dualmode(shape):
+    b, s, t, k, g, h, hv = shape
+    q, kk, v = _mk(b, s, t, k, g, h, hv)
+    q_pos = jnp.broadcast_to(jnp.arange(t - s, t)[None], (b, s))
+    kv_valid = jnp.asarray(RNG.random((b, t)) > 0.3)
+    kv_valid = kv_valid.at[:, 0].set(True)
+    want = _naive_sdpa(q, kk, v, q_pos=q_pos, kv_valid=kv_valid,
+                       causal=True, softmax_impl="dualmode")
+    got = flash_attention_pallas_int(q, kk, v, q_pos=q_pos,
+                                     kv_valid=kv_valid, causal=True,
+                                     block_q=8, block_kv=16,
+                                     interpret=True)
+    assert got.shape == want.shape
+    # identical prob words; only f32 prob@v reduction order may differ
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+def test_kernel_all_rows_saturated_matches_naive():
+    """Every real score below the S5.10 floor: the quantizer clips them
+    all to the same word (uniform row) — phantoms must still carry zero
+    mass rather than joining the uniform mass."""
+    b, s, t, k, g, h = 1, 8, 100, 1, 1, 16
+    q = jnp.full((b, s, k, g, h), 3.0, jnp.float32)
+    kk = jnp.full((b, t, k, h), -3.0, jnp.float32)    # scores << -32
+    v = jnp.asarray(RNG.normal(size=(b, t, k, h)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(t - s, t)[None], (b, s))
+    kv_valid = jnp.ones((b, t), bool)
+    want = _naive_sdpa(q, kk, v, q_pos=q_pos, kv_valid=kv_valid,
+                       causal=False, softmax_impl="dualmode")
+    got = flash_attention_pallas_int(q, kk, v, q_pos=q_pos,
+                                     kv_valid=kv_valid, causal=False,
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+def test_sdpa_routes_dualmode_to_int_kernel():
+    q, kk, v = _mk(1, 48, 48, 2, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(48)[None], (1, 48))
+    kv_valid = jnp.ones((1, 48), bool)
+    got = _sdpa(q, kk, v, q_pos=q_pos, kv_valid=kv_valid,
+                softmax_impl="dualmode", attn_impl="flash_pallas_int")
+    want = _sdpa(q, kk, v, q_pos=q_pos, kv_valid=kv_valid,
+                 softmax_impl="dualmode", attn_impl="naive")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+# ---------------- dispatch: dualmode can never be dropped ---------------
+
+def test_registry_has_int_impl():
+    assert callable(dispatch.get_attention("flash_pallas_int"))
+
+
+def test_resolve_auto_dualmode_routes_to_int_paths():
+    # short rows: whole-row unit on the naive path
+    assert dispatch.resolve_attention(
+        "auto", 64, 64, softmax_impl="dualmode") == "naive"
+    # blocked shapes: the int kernel, NEVER the float blocked paths
+    assert dispatch.resolve_attention(
+        "auto", 4096, 4096, softmax_impl="dualmode") == "flash_pallas_int"
+    # float softmax keeps the float auto rule untouched
+    assert dispatch.resolve_attention("auto", 4096, 4096) == "flash"
+
+
+@pytest.mark.parametrize("impl", ["flash", "flash_pallas"])
+def test_explicit_float_blocked_plus_dualmode_raises(impl):
+    with pytest.raises(ValueError, match="dualmode"):
+        dispatch.resolve_attention(impl, 4096, 4096,
+                                   softmax_impl="dualmode")
+
+
+def test_int_impl_requires_dualmode():
+    with pytest.raises(ValueError, match="dualmode"):
+        dispatch.resolve_attention("flash_pallas_int", 64, 64,
+                                   softmax_impl="float")
+    with pytest.raises(ValueError):
+        flash = dispatch.get_attention("flash_pallas_int")
+        q, kk, v = _mk(1, 8, 8, 1, 1, 8)
+        flash(q, kk, v, q_pos=jnp.zeros((1, 8), jnp.int32),
+              kv_valid=jnp.ones((1, 8), bool), causal=True, scale=None,
+              softmax_impl="float")
+
+
+@pytest.mark.parametrize("impl", ["flash", "flash_pallas"])
+def test_float_blocked_entries_refuse_dualmode_directly(impl):
+    """Even bypassing resolve_attention, the registered float entries
+    refuse to silently run fp32 in place of the unit."""
+    q, kk, v = _mk(1, 8, 8, 1, 1, 8)
+    with pytest.raises(ValueError, match="dualmode"):
+        dispatch.get_attention(impl)(
+            q, kk, v, q_pos=jnp.zeros((1, 8), jnp.int32),
+            kv_valid=jnp.ones((1, 8), bool), causal=True, scale=None,
+            softmax_impl="dualmode")
+
+
+def test_naive_plus_dualmode_still_resolves():
+    assert dispatch.resolve_attention(
+        "naive", 4096, 4096, softmax_impl="dualmode") == "naive"
+
+
+def test_model_end_to_end_int_kernel_matches_naive_dualmode():
+    """configs -> transformer -> dispatch -> int kernel, full vertical
+    slice: a dualmode LM forward with attn_impl='flash_pallas_int' must
+    match the same model on the naive whole-row unit."""
+    import jax
+    from repro.configs import registry
+    from repro.models.transformer import init_lm, lm_apply
+
+    cfg = registry.reduced_config("qwen1.5-0.5b").replace(
+        softmax_impl="dualmode", attn_impl="flash_pallas_int")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]], jnp.int32)
+    logits, _, _ = lm_apply(params, cfg, toks, pos=0)
+    ref_cfg = cfg.replace(attn_impl="naive")
+    want, _, _ = lm_apply(params, ref_cfg, toks, pos=0)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               atol=1e-5)

@@ -127,6 +127,26 @@ def test_pallas_flash_explicit_blocks_and_dtype():
                                np.asarray(want, np.float32), atol=3e-2)
 
 
+def test_scale_is_traced_no_recompile_per_scale():
+    """`scale` rides as a traced operand folded into the q pre-scale —
+    distinct head-dim/user scales must share ONE compilation (it used to
+    be a jit static argname, recompiling the kernel per value)."""
+    q, k, v = _mk(1, 16, 16, 1, 1, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    kv_valid = jnp.ones((1, 16), bool)
+    from repro.kernels.flash_attention import _flash_pallas_jit
+    base = _flash_pallas_jit._cache_size()
+    outs = [flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                   scale=sc, interpret=True)
+            for sc in (0.125, 0.25, 0.3535, 1.0)]
+    assert _flash_pallas_jit._cache_size() - base <= 1
+    # and the scale value still matters numerically
+    want = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid, scale=0.25)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(want),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(outs[0]), np.asarray(outs[3]))
+
+
 # ---------------- dispatch registry ----------------
 
 def test_registry_has_all_attention_impls():

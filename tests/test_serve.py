@@ -65,6 +65,77 @@ def test_temperature_sampling_varies():
         assert all(0 <= t < cfg.vocab for t in o)
 
 
+def test_max_new_zero_emits_no_tokens():
+    """A max_new=0 request finishes with an EMPTY completion — it used to
+    emit the prefill-sampled token unconditionally (and burn a prefill)."""
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=32,
+                      prefill_buckets=(8,))
+    outs = eng.run([Request(rid=0, prompt=[1, 2, 3], max_new=0),
+                    Request(rid=1, prompt=[4, 5], max_new=3)])
+    assert outs[0] == []
+    assert outs[1] == _oracle(cfg, params, [4, 5], 3)
+    assert eng.stats["prefills"] == 1          # zero request never prefilled
+    assert eng.stats["admitted"] == 2
+    assert eng.active == 0
+
+
+def test_overlong_prompt_raises_bucketed():
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                      prefill_buckets=(8,))
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(Request(rid=0, prompt=list(range(9)), max_new=1))
+    assert eng.pending() == 0                  # nothing left half-queued
+
+
+def test_overlong_prompt_raises_exact_prefill():
+    """The exact-length (mamba/rwkv) prefill path used to skip the length
+    check entirely and silently overrun the cache."""
+    cfg = registry.reduced_config("rwkv6-1.6b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(rid=0, prompt=list(range(17)), max_new=1))
+    assert eng.pending() == 0
+
+
+def test_per_phase_attn_impl_selection():
+    """Prefill and decode pin their own registry-resolved attention impls;
+    an explicit per-phase choice is honored and still matches the oracle."""
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                      prefill_buckets=(8,))
+    assert eng.decode_attn_impl == "naive"     # s_q=1 rows stay whole-row
+    # a config that PINS an impl keeps it for both phases (the engine's
+    # per-phase defaults defer to cfg.attn_impl rather than clobber it)
+    pinned = ServeEngine(cfg.replace(attn_impl="naive"), params, n_slots=1,
+                         max_seq=32, prefill_buckets=(8,))
+    assert pinned.prefill_attn_impl == "naive"
+    assert pinned.decode_attn_impl == "naive"
+    eng2 = ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                       prefill_buckets=(8,),
+                       prefill_attn_impl="flash_pallas",
+                       decode_attn_impl="naive")
+    assert eng2.prefill_attn_impl == "flash_pallas"
+    out = eng2.run([Request(rid=0, prompt=[1, 2, 3], max_new=4)])[0]
+    assert out == _oracle(cfg, params, [1, 2, 3], 4)
+
+
+def test_dualmode_engine_refuses_float_blocked_prefill():
+    """softmax_impl='dualmode' + an explicit float blocked prefill impl
+    must fail at engine construction, not silently drop the unit."""
+    cfg = registry.reduced_config("qwen1.5-0.5b").replace(
+        softmax_impl="dualmode")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="dualmode"):
+        ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                    prefill_buckets=(8,), prefill_attn_impl="flash")
+
+
 def test_slot_reuse_more_requests_than_slots():
     cfg = registry.reduced_config("qwen1.5-0.5b")
     params = init_lm(jax.random.PRNGKey(0), cfg)
