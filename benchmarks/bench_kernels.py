@@ -132,7 +132,91 @@ def main_flash_int(json_path: str | None = None) -> None:
         print(f"# wrote {os.path.abspath(json_path)}")
 
 
+def main_flash_bwd(json_path: str | None = None) -> None:
+    """Backward shoot-out: one full (dq, dk, dv) grad step through naive /
+    pure-JAX flash / the Pallas kernel, whose VJP now runs the dedicated
+    dq and dk/dv backward kernels (kernels/flash_attention_bwd.py) from
+    the saved (m, l) residuals — plus the fused-GLU backward kernel next
+    to the unfused reference VJP.
+
+    Records BENCH_flash_bwd.json.  Off-TPU the Pallas numbers are
+    interpret mode — a correctness checkpoint, not a speed claim; the max
+    |pallas - reference| grad residuals are recorded alongside.
+    """
+    rng = np.random.default_rng(0)
+    b, s, k, g, h = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, k, g, h)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    valid = jnp.ones((b, s), bool)
+
+    from repro.kernels.fused_ffn import _glu_reference, fused_glu_pallas
+
+    def grad_of(fn):
+        return jax.jit(jax.grad(
+            lambda q_, k_, v_: fn(q_, k_, v_).sum(), argnums=(0, 1, 2)))
+
+    impls = {
+        "naive_bwd": grad_of(lambda q_, k_, v_: _naive_sdpa(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid)),
+        "flash_jax_bwd": grad_of(lambda q_, k_, v_: flash_attention(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid, block=256)),
+        "flash_pallas_bwd": grad_of(lambda q_, k_, v_:
+                                    flash_attention_pallas(
+                                        q_, k_, v_, q_pos=q_pos,
+                                        kv_valid=valid)),
+    }
+    results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
+                         "head_dim": h},
+               "backend": jax.default_backend(), "us_per_call": {}}
+    grads = {}
+    for name, fn in impls.items():
+        grads[name] = jax.block_until_ready(fn(q, kk, v))  # warm + capture
+        t = time_fn(fn, q, kk, v, iters=5)
+        results["us_per_call"][name] = t
+        emit(f"kernels/flash_bwd_{name}_us", t,
+             f"backend={jax.default_backend()}")
+    residual = max(
+        float(jnp.abs(a - b_).max())
+        for a, b_ in zip(grads["flash_pallas_bwd"], grads["flash_jax_bwd"]))
+    results["grad_parity_max_abs_vs_flash_jax"] = residual
+    emit("kernels/flash_bwd_parity_max_abs", residual * 1e6,
+         "max |dq/dk/dv pallas - pure-JAX flash VJP|, x1e-6")
+
+    # fused GLU backward: the VMEM d_gate/d_up kernel vs the unfused graph
+    m_, k_, f_ = 256, 512, 1024
+    x = jnp.asarray(rng.normal(size=(m_, k_)) * 0.5, jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(k_, f_)) / k_ ** 0.5, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(k_, f_)) / k_ ** 0.5, jnp.float32)
+    interp = jax.default_backend() != "tpu"
+    glu = {
+        "glu_ref_bwd": jax.jit(jax.grad(
+            lambda *a: _glu_reference(*a, "silu").sum(), argnums=(0, 1, 2))),
+        "glu_fused_bwd": jax.jit(jax.grad(
+            lambda *a: fused_glu_pallas(
+                *a, mode="silu", interpret=interp).sum(),
+            argnums=(0, 1, 2))),
+    }
+    gouts = {}
+    for name, fn in glu.items():
+        gouts[name] = jax.block_until_ready(fn(x, wg, wu))
+        t = time_fn(fn, x, wg, wu, iters=5)
+        results["us_per_call"][name] = t
+        emit(f"kernels/{name}_us", t, f"backend={jax.default_backend()}")
+    glu_res = max(float(jnp.abs(a - b_).max()) for a, b_ in
+                  zip(gouts["glu_fused_bwd"], gouts["glu_ref_bwd"]))
+    results["glu_grad_parity_max_abs_vs_reference"] = glu_res
+    emit("kernels/glu_bwd_parity_max_abs", glu_res * 1e6,
+         "max |d(x,wg,wu) fused - unfused reference VJP|, x1e-6")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+
+
 if __name__ == "__main__":
     main()
     main_flash("BENCH_flash.json")
     main_flash_int("BENCH_flash_int.json")
+    main_flash_bwd("BENCH_flash_bwd.json")

@@ -99,6 +99,29 @@ def pair_act(z, mode: str):
     raise ValueError(f"unknown pair-act mode {mode!r}")
 
 
+def pair_act_grad(z, mode: str):
+    """d/dz of :func:`pair_act` — the single float home of the derivative.
+
+    Written in terms of the unit's own ``pair_sigmoid`` tap (s = sigma(2k))
+    so the backward kernels evaluate the identical log-domain exponentials
+    the forward ran:
+
+        y  = z * s(k(z))
+        y' = s + z * 2 s (1 - s) * k'(z)
+
+    with k(z) = z/2 (SiLU, so 2k' = 1) or the Eq. (8) cubic (GELU, where
+    k' = sqrt(2/pi) * (1 + 3 * 0.044715 z^2)).
+    """
+    if mode == "gelu":
+        s = pair_sigmoid(gelu_k(z))
+        kp = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_CUBIC * z * z)
+        return s + z * (2.0 * s * (1.0 - s)) * kp
+    if mode == "silu":
+        s = pair_sigmoid(0.5 * z)
+        return s + z * s * (1.0 - s)
+    raise ValueError(f"unknown pair-act mode {mode!r}")
+
+
 # --------------------------------------------------------------------------
 # online softmax (Eq. 10 streamed — flash attention's inner step)
 # --------------------------------------------------------------------------

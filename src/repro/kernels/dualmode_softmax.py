@@ -74,7 +74,11 @@ def softmax_pallas(x, *, precision: str = "int", interpret: bool = False):
     pad = dp.MASK_VALUE if precision == "int" else -jnp.inf
     xp, _ = tiling.pad_dim(x, 1, tiling.LANE, value=pad)
     br = tiling.row_block(rows, xp.shape[1])
-    xp, _ = tiling.pad_dim(xp, 0, br, value=pad)
+    # the ROW tail is sliced off whole, so it pads with a finite 0.0 —
+    # reusing the column no-mass value made float-path phantom rows all
+    # -inf, whose in-kernel (-inf) - (-inf) = NaN poisoned jax.debug_nans
+    # runs even though the rows were discarded
+    xp, _ = tiling.pad_dim(xp, 0, br, value=0.0)
     y = pl.pallas_call(
         functools.partial(_softmax_body, precision=precision),
         grid=(xp.shape[0] // br,),

@@ -21,6 +21,14 @@ like the naive path, so all three implementations agree on masking.
 Non-divisible S/T are padded up to the block grid (``kernels/tiling.py``
 policy) and the output sliced back; padded KV rows are simply invalid.
 Runs on CPU with ``interpret=True`` (the default off-TPU).
+
+Residual contract: the forward emits the per-row online-softmax
+statistics ``(m, l)`` — running max and normalizer of the PRE-SCALED
+masked scores, laid out (B, K, G, S) — as extra kernel outputs.  The
+custom VJP saves ``(o, m, l)`` so the backward kernels
+(``kernels/flash_attention_bwd.py``) re-derive the probabilities from the
+same :func:`datapath.online_softmax_update` arithmetic instead of
+re-running the whole unfused forward graph.
 """
 from __future__ import annotations
 
@@ -59,10 +67,49 @@ def attention_blockspecs(bq: int, bkv: int, g: int, hd: int, hv: int):
     return in_specs, out_spec
 
 
-def _flash_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
-                m_ref, l_ref, acc_ref, *, block_kv: int, causal: bool,
-                t_kv: int):
+def rowstat_blockspec(bq: int, g: int):
+    """BlockSpec for the (B, K, G, S) per-row statistic arrays (m, l, D)
+    on the forward/dq grid layout (b, head, q_tile, *rest)."""
+    return pl.BlockSpec((1, 1, 1, bq),
+                        lambda b_, h_, qi, *r: (b_, h_ // g, h_ % g, qi))
+
+
+def masked_score_block(q, kb, qpos_ref, valid_ref, kv_tile: int, *,
+                       block_kv: int, causal: bool, t_kv: int):
+    """(masked scores, mask) tile — ONE definition of the flash masking.
+
+    Scores take ``datapath.MASK_VALUE`` for user-invalid / causally
+    masked keys (matching the naive path bitwise) and ``-inf`` for
+    tiling-padded phantom keys, which must carry NO mass.  Shared by the
+    forward body and both backward kernels so forward and backward can
+    never disagree on which keys are "off".  The mask is returned because
+    the backward must zero dS where the score was replaced by the
+    constant MASK_VALUE — the ``jnp.where`` routes no gradient into the
+    untaken branch, and the reference VJP therefore sends exactly 0
+    through masked positions while their (tiny but nonzero) probability
+    mass still reaches dV.
+    """
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bkv)
+    mask = valid_ref[...] != 0                            # (1, bkv) -> bcast
+    kv_pos = kv_tile * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    if causal:
+        q_pos = qpos_ref[...].reshape(-1, 1)              # (bq, 1)
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, dp.MASK_VALUE)
+    return jnp.where(kv_pos < t_kv, s, -jnp.inf), \
+        jnp.broadcast_to(mask, s.shape)
+
+
+def _flash_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+                block_kv: int, causal: bool, t_kv: int, with_stats: bool):
+    if with_stats:
+        m_out_ref, l_out_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        m_ref, l_ref, acc_ref = rest
     kj = pl.program_id(3)
+    hv = o_ref.shape[-1]
 
     @pl.when(kj == 0)
     def _():
@@ -73,37 +120,79 @@ def _flash_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, :, 0, 0, :].astype(jnp.float32)          # (bq, h) pre-scaled
     kb = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, h)
     vb = v_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, hv)
-    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # (bq, bkv)
-
-    mask = valid_ref[...] != 0                            # (1, bkv) -> bcast
-    kv_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    if causal:
-        q_pos = qpos_ref[...].reshape(-1, 1)              # (bq, 1)
-        mask = mask & (kv_pos <= q_pos)
-    s = jnp.where(mask, s, dp.MASK_VALUE)
-    # tiling-padded phantom keys carry NO mass (-inf); user-invalid keys
-    # keep the finite MASK_VALUE so masking matches the naive path bitwise
-    s = jnp.where(kv_pos < t_kv, s, -jnp.inf)
+    s, _ = masked_score_block(q, kb, qpos_ref, valid_ref, kj,
+                              block_kv=block_kv, causal=causal, t_kv=t_kv)
 
     m, l = m_ref[:, :1], l_ref[:, :1]                     # (bq, 1)
     m_new, l_new, p, corr = dp.online_softmax_update(m, l, s)
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+    # acc scratch is lane-rounded (hv may be off the 128 grid — MLA);
+    # only the live [:, :hv] slice carries data
+    acc_ref[:, :hv] = acc_ref[:, :hv] * corr + jnp.dot(
         p, vb, preferred_element_type=jnp.float32)
     m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
     l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
     @pl.when(kj == pl.num_programs(3) - 1)
     def _():
-        out = dp.online_softmax_finish(l_ref[:, :1], acc_ref[...])
+        out = dp.online_softmax_finish(l_ref[:, :1], acc_ref[:, :hv])
         o_ref[0, :, 0, 0, :] = out.astype(o_ref.dtype)
+        if with_stats:
+            m_out_ref[0, 0, 0, :] = m_ref[:, 0]
+            l_out_ref[0, 0, 0, :] = l_ref[:, 0]
+
+
+def _flash_fwd_call(q, k, v, q_pos, kv_valid, *, causal: bool, bq: int,
+                    bkv: int, interpret: bool, with_stats: bool):
+    """Padded forward pallas_call; ``q`` must already be pre-scaled f32.
+
+    ``with_stats=True`` (the grad/fwd path) returns (o, m, l) with m/l
+    the (B, K, G, S) per-row online-softmax statistics — the backward
+    kernels' residuals.  ``with_stats=False`` (the inference primal)
+    returns o alone, so forward-only calls never pay the extra stat HBM
+    writes.  Everything is sliced back to the logical sequence length.
+    """
+    b, s_q, kh, g, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]
+    qf, qp, kf, vf, valid = tiling.pad_attention_operands(
+        q, q_pos, k, v, kv_valid, bq, bkv)
+    s_p, t_p = qf.shape[1], kf.shape[1]
+
+    in_specs, out_spec = attention_blockspecs(bq, bkv, g, hd, hv)
+    stat_spec = rowstat_blockspec(bq, g)
+    o_shape = jax.ShapeDtypeStruct((b, s_p, kh, g, hv), v.dtype)
+    stat_shape = jax.ShapeDtypeStruct((b, kh, g, s_p), jnp.float32)
+    grid = (b, kh * g, s_p // bq, t_p // bkv)
+    out = pl.pallas_call(
+        functools.partial(_flash_body, block_kv=bkv, causal=causal,
+                          t_kv=t, with_stats=with_stats),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=([out_spec, stat_spec, stat_spec] if with_stats
+                   else out_spec),
+        out_shape=([o_shape, stat_shape, stat_shape] if with_stats
+                   else o_shape),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _STATE_LANES), jnp.float32),  # running max m
+            pltpu.VMEM((bq, _STATE_LANES), jnp.float32),  # running sum l
+            pltpu.VMEM((bq, tiling.scratch_lanes(hv)),
+                       jnp.float32),                      # weighted-v acc
+        ],
+        interpret=interpret,
+    )(qp, valid, qf, kf, vf)
+    if not with_stats:
+        return tiling.unpad(out, 1, s_q)
+    o, m, l = out
+    return (tiling.unpad(o, 1, s_q), tiling.unpad(m, 3, s_q),
+            tiling.unpad(l, 3, s_q))
 
 
 def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
                            scale: float | None = None,
                            block_q: int | None = None,
                            block_kv: int | None = None,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           return_stats: bool = False):
     """Blocked flash attention; see module docstring for shapes/masking.
 
     ``scale`` rides as a TRACED operand (folded into the q pre-scale
@@ -111,10 +200,14 @@ def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
     compilation — only genuinely structural args (blocks, causal,
     interpret) are jit-static.
 
-    Differentiable: Pallas has no AD rule for the streamed body, so the
-    backward pass recomputes through the pure-JAX blocked path
-    (models/flash.py) — the identical online-softmax arithmetic, just
-    unfused.  Dedicated dq/dk/dv Pallas kernels are a ROADMAP item.
+    Differentiable: the custom VJP runs the dedicated dq and dk/dv Pallas
+    kernels (``kernels/flash_attention_bwd.py``) from the saved
+    ``(o, m, l)`` residuals — the pure-JAX blocked path (models/flash.py)
+    remains the reference the backward is pinned against in tests.
+
+    ``return_stats=True`` returns ``(out, m, l)`` with the (B, K, G, S)
+    per-row statistics of the pre-scaled scores (forward-only form, for
+    residual-contract parity tests).
     """
     hd = q.shape[-1]
     if interpret is None:
@@ -125,69 +218,55 @@ def flash_attention_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
     bkv = bkv if block_kv is None else block_kv
     return _flash_pallas_jit(q, k, v, q_pos, kv_valid,
                              jnp.float32(scale), causal=causal, block_q=bq,
-                             block_kv=bkv, interpret=interpret)
+                             block_kv=bkv, interpret=interpret,
+                             return_stats=return_stats)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "block_q", "block_kv", "interpret"))
+    "causal", "block_q", "block_kv", "interpret", "return_stats"))
 def _flash_pallas_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
-                      block_q: int, block_kv: int, interpret: bool):
-    b, s_q, kh, g, hd = q.shape
-    t = k.shape[1]
-    hv = v.shape[-1]
+                      block_q: int, block_kv: int, interpret: bool,
+                      return_stats: bool = False):
     bq, bkv = block_q, block_kv
     # fold the traced scale into q HERE, outside the custom_vjp, so (a) no
     # tracer is closed over by fwd/bwd and (b) d(scale) flows through the
     # multiply for free while the kernel itself stays scale-free
     q = q.astype(jnp.float32) * scale
 
-    def forward(q_, k_, v_, q_pos_, kv_valid_):
-        qf, qp, kf, vf, valid = tiling.pad_attention_operands(
-            q_, q_pos_, k_, v_, kv_valid_, bq, bkv)
-        s_p, t_p = qf.shape[1], kf.shape[1]
-
-        in_specs, out_spec = attention_blockspecs(bq, bkv, g, hd, hv)
-        grid = (b, kh * g, s_p // bq, t_p // bkv)
-        out = pl.pallas_call(
-            functools.partial(_flash_body, block_kv=bkv, causal=causal,
-                              t_kv=t),
-            grid=grid,
-            in_specs=in_specs,
-            out_specs=out_spec,
-            out_shape=jax.ShapeDtypeStruct((b, s_p, kh, g, hv), v_.dtype),
-            scratch_shapes=[
-                pltpu.VMEM((bq, _STATE_LANES), jnp.float32),  # running max m
-                pltpu.VMEM((bq, _STATE_LANES), jnp.float32),  # running sum l
-                pltpu.VMEM((bq, hv), jnp.float32),            # weighted-v acc
-            ],
-            interpret=interpret,
-        )(qp, valid, qf, kf, vf)
-        return tiling.unpad(out, 1, s_q)
+    if return_stats:
+        return _flash_fwd_call(q, k, v, q_pos, kv_valid, causal=causal,
+                               bq=bq, bkv=bkv, interpret=interpret,
+                               with_stats=True)
 
     # q_pos / kv_valid ride along as explicit primals (closing over them
     # would leak the enclosing jit's tracers into the custom_vjp jaxpr);
     # being integer/bool they get float0 cotangents.
     @jax.custom_vjp
     def run(q_, k_, v_, q_pos_, kv_valid_):
-        return forward(q_, k_, v_, q_pos_, kv_valid_)
+        # the non-differentiated primal: stats are only a backward
+        # residual, so inference calls skip their HBM writes entirely
+        return _flash_fwd_call(q_, k_, v_, q_pos_, kv_valid_,
+                               causal=causal, bq=bq, bkv=bkv,
+                               interpret=interpret, with_stats=False)
 
     def fwd(q_, k_, v_, q_pos_, kv_valid_):
-        return forward(q_, k_, v_, q_pos_, kv_valid_), \
-            (q_, k_, v_, q_pos_, kv_valid_)
+        o, m, l = _flash_fwd_call(q_, k_, v_, q_pos_, kv_valid_,
+                                  causal=causal, bq=bq, bkv=bkv,
+                                  interpret=interpret, with_stats=True)
+        return o, (q_, k_, v_, o, m, l, q_pos_, kv_valid_)
 
     def bwd(res, gy):
         import numpy as np
-        from repro.models.flash import flash_attention as flash_ref
-        q_, k_, v_, q_pos_, kv_valid_ = res
-        # q_ is already pre-scaled, so the recompute runs at scale=1.0 (a
-        # static float — the traced scale operand must not be closed over)
-        _, vjp = jax.vjp(
-            lambda a, b_, c: flash_ref(a, b_, c, q_pos=q_pos_,
-                                       kv_valid=kv_valid_, causal=causal,
-                                       scale=1.0), q_, k_, v_)
+        from .flash_attention_bwd import flash_attention_bwd_pallas
+        q_, k_, v_, o, m, l, q_pos_, kv_valid_ = res
+        # q_ is already pre-scaled, so the backward kernels run scale-free
+        # (the scale's own gradient flows through the fold-in multiply)
+        dq, dk, dv = flash_attention_bwd_pallas(
+            q_, k_, v_, o, m, l, gy, q_pos=q_pos_, kv_valid=kv_valid_,
+            causal=causal, block_q=bq, block_kv=bkv, interpret=interpret)
         f0 = jax.dtypes.float0
-        return (*vjp(gy), np.zeros(q_pos_.shape, f0),
-                np.zeros(kv_valid_.shape, f0))
+        return (dq, dk.astype(k_.dtype), dv.astype(v_.dtype),
+                np.zeros(q_pos_.shape, f0), np.zeros(kv_valid_.shape, f0))
 
     run.defvjp(fwd, bwd)
     return run(q, k, v, q_pos, kv_valid)

@@ -31,9 +31,10 @@ k (B,T,K,h), v (B,T,K,hv) -> (B,S,K,G,hv); user-invalid or causally
 masked keys score ``datapath.MASK_VALUE`` BEFORE quantization (the same
 finite word the naive dual-mode path sees), while tiling-phantom keys
 take the ``PHANTOM_Q`` sentinel whose exponential is the literal 0 word.
-Scores quantize as ``quantize((q . k) * scale)`` in exactly the naive
-path's operation order, so the S5.10 score words — and therefore the
-probability words — are identical to naive ``softmax_impl='dualmode'``.
+Scores quantize as ``quantize((q*scale) . k)`` in exactly the naive
+path's operation order (scale folded into q in f32 before the dot), so
+the S5.10 score words — and therefore the probability words — are
+identical to naive ``softmax_impl='dualmode'``.
 
 Forward-only: the int unit is step-quantized (gradients vanish a.e.), so
 no VJP is defined and differentiating through this kernel raises.
@@ -55,11 +56,12 @@ from . import dispatch, tiling
 from .flash_attention import _STATE_LANES, attention_blockspecs
 
 
-def _flash_int_body(scale_ref, qpos_ref, valid_ref, q_ref, k_ref, v_ref,
+def _flash_int_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref,
                     o_ref, m_ref, l_ref, acc_ref, *, block_kv: int,
                     causal: bool, t_kv: int, guard_shift: int):
     phase = pl.program_id(3)
     kj = pl.program_id(4)
+    hv = o_ref.shape[-1]
 
     @pl.when((phase == 0) & (kj == 0))
     def _():
@@ -67,11 +69,11 @@ def _flash_int_body(scale_ref, qpos_ref, valid_ref, q_ref, k_ref, v_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, :, 0, 0, :].astype(jnp.float32)          # (bq, h) UNscaled
+    q = q_ref[0, :, 0, 0, :].astype(jnp.float32)          # (bq, h) pre-scaled
     kb = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, h)
+    # naive order: (q*scale) . k, THEN mask — scale folded into q outside
     s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (bq, bkv)
-    s = s * scale_ref[0, 0]          # naive order: (q . k) * scale, THEN mask
 
     mask = valid_ref[...] != 0                            # (1, bkv) -> bcast
     kv_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -102,12 +104,14 @@ def _flash_int_body(scale_ref, qpos_ref, valid_ref, q_ref, k_ref, v_ref,
         p = unit.online_probs_int(m, l_ref[:, :1], sq, guard_shift)
         pf = dequantize(p, EXP_FRAC)                      # exact prob floats
         vb = v_ref[0, :, 0, :].astype(jnp.float32)        # (bkv, hv)
-        acc_ref[...] = acc_ref[...] + jnp.dot(
+        # acc scratch is lane-rounded (hv may be off the 128 grid — MLA);
+        # only the live [:, :hv] slice carries data
+        acc_ref[:, :hv] = acc_ref[:, :hv] + jnp.dot(
             pf, vb, preferred_element_type=jnp.float32)
 
     @pl.when((phase == 2) & (kj == pl.num_programs(4) - 1))
     def _():
-        o_ref[0, :, 0, 0, :] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[0, :, 0, 0, :] = acc_ref[:, :hv].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -120,11 +124,14 @@ def _flash_int_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
     bq, bkv = block_q, block_kv
     # same guard as the whole-row unit applies for an n=t row
     guard_shift = max(0, t.bit_length() - 16)
+    # fold the traced scale into q in the naive path's op order (q*scale
+    # in f32 BEFORE the dot): the per-element score dot is then bitwise
+    # identical to the naive einsum, keeping the quantized words pinned
+    q = q.astype(jnp.float32) * scale
 
     qf, qp, kf, vf, valid = tiling.pad_attention_operands(
         q, q_pos, k, v, kv_valid, bq, bkv)
     s_p, t_p = qf.shape[1], kf.shape[1]
-    scale2d = jnp.asarray(scale, jnp.float32).reshape(1, 1)
 
     in_specs, out_spec = attention_blockspecs(bq, bkv, g, hd, hv)
     # only the emit sweep reads v: pin its block index to 0 during the
@@ -138,16 +145,17 @@ def _flash_int_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
         functools.partial(_flash_int_body, block_kv=bkv, causal=causal,
                           t_kv=t, guard_shift=guard_shift),
         grid=grid,
-        in_specs=[pl.BlockSpec((1, 1), lambda *idx: (0, 0))] + in_specs,
+        in_specs=in_specs,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((b, s_p, kh, g, hv), v.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, _STATE_LANES), jnp.int32),    # running max m
             pltpu.VMEM((bq, _STATE_LANES), jnp.int32),    # guard-shifted l
-            pltpu.VMEM((bq, hv), jnp.float32),            # weighted-v acc
+            pltpu.VMEM((bq, tiling.scratch_lanes(hv)),
+                       jnp.float32),                      # weighted-v acc
         ],
         interpret=interpret,
-    )(scale2d, qp, valid, qf, kf, vf)
+    )(qp, valid, qf, kf, vf)
     return tiling.unpad(out, 1, s_q)
 
 

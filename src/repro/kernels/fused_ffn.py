@@ -11,12 +11,23 @@ fusing the epilogue into the matmul tile keeps them VMEM-resident — at
 qwen3-14b train_4k that round trip is 2·tokens·d_ff·2B = 146 GB/step of
 HBM traffic (≈0.18 s at 819 GB/s), removed entirely.
 
+The backward is fused the same way: one kernel recomputes the (g, u)
+tiles and emits d_gate = dY·u·act'(g) and d_up = dY·act(g) in VMEM
+(``datapath.pair_act_grad`` is the single float home of the derivative);
+the four surrounding matmuls (dX, dWg, dWu) are plain XLA dots.  The
+unfused ``_glu_reference`` graph remains the differentiation reference
+tests pin gradients against.
+
 Tiling: grid over (M/bm, F/bf) output tiles; K (= d_model) kept whole per
 tile — X tile (bm, K) + two weight tiles (K, bf) fit VMEM for every
 assigned arch (K ≤ 5120: 3 × 128·5120·4B ≈ 7.9 MB < 16 MB v5e VMEM).
-Block shapes come from kernels/tiling.py: MXU-aligned, with M and F padded
-up to the block grid (zero rows/columns cost act(0)·0 = 0 and are sliced
-off) instead of shrinking blocks to divisors.
+Block shapes resolve BEFORE the jit boundary (mirroring
+``flash_attention_pallas``): ``kernels/tiling.matmul_blocks`` when the
+caller passes none, explicit ``bm``/``bf`` hints honored (rounded up to the
+hardware alignment) — so distinct hints that resolve identically share
+one compilation.  M and F
+are padded up to the block grid (zero rows/columns cost act(0)·0 = 0 and
+are sliced off) instead of shrinking blocks to divisors.
 """
 from __future__ import annotations
 
@@ -37,27 +48,83 @@ def _ffn_body(x_ref, wg_ref, wu_ref, o_ref, *, mode: str):
     o_ref[...] = (dp.pair_act(g, mode) * u).astype(o_ref.dtype)
 
 
+def _ffn_bwd_body(x_ref, wg_ref, wu_ref, dy_ref, dg_ref, du_ref, *,
+                  mode: str):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    dg_ref[...] = dy * u * dp.pair_act_grad(g, mode)
+    du_ref[...] = dy * dp.pair_act(g, mode)
+
+
 def _glu_reference(x, wg, wu, mode: str):
     """Unfused float graph with the SAME epilogue arithmetic — the
-    differentiation surrogate for the kernel's backward pass."""
+    reference the fused forward AND backward are pinned against."""
     g = jnp.dot(x.astype(jnp.float32), wg.astype(jnp.float32))
     u = jnp.dot(x.astype(jnp.float32), wu.astype(jnp.float32))
     return (dp.pair_act(g, mode) * u).astype(x.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("mode", "interpret", "bm", "bf"))
-def fused_glu_pallas(x, wg, wu, *, mode: str = "silu",
-                     interpret: bool = False, bm: int = 128, bf: int = 512):
-    """x (M,K) @ wg/wu (K,F) with fused activation epilogue -> (M,F).
-
-    Differentiable: Pallas has no AD rule for the fused body, so the
-    backward pass recomputes through the unfused reference graph (same
-    datapath arithmetic, so gradients match the kernel's own math).
-    """
+def _glu_bwd_call(x, wg, wu, dy, *, mode: str, bm: int, bf: int,
+                  interpret: bool):
+    """(d_gate, d_up) f32 tiles from the fused backward kernel."""
     m, k = x.shape
     f = wg.shape[1]
-    bm, bf = tiling.matmul_blocks(m, f, want_m=bm, want_f=bf)
+    xp, _ = tiling.pad_dim(x, 0, bm)
+    wgp, _ = tiling.pad_dim(wg, 1, bf)
+    wup, _ = tiling.pad_dim(wu, 1, bf)
+    dyp, _ = tiling.pad_dim(dy.astype(jnp.float32), 0, bm)
+    dyp, _ = tiling.pad_dim(dyp, 1, bf)
+    dg, du = pl.pallas_call(
+        functools.partial(_ffn_bwd_body, mode=mode),
+        grid=(xp.shape[0] // bm, wgp.shape[1] // bf),
+        in_specs=[pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                  pl.BlockSpec((k, bf), lambda i, j: (0, j)),
+                  pl.BlockSpec((k, bf), lambda i, j: (0, j)),
+                  pl.BlockSpec((bm, bf), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((bm, bf), lambda i, j: (i, j))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((xp.shape[0], wgp.shape[1]),
+                                        jnp.float32)] * 2,
+        interpret=interpret,
+    )(xp, wgp, wup, dyp)
+    return (tiling.unpad(tiling.unpad(dg, 0, m), 1, f),
+            tiling.unpad(tiling.unpad(du, 0, m), 1, f))
+
+
+def fused_glu_pallas(x, wg, wu, *, mode: str = "silu",
+                     interpret: bool = False, bm: int | None = None,
+                     bf: int | None = None):
+    """x (M,K) @ wg/wu (K,F) with fused activation epilogue -> (M,F).
+
+    Blocks resolve HERE, before the jit boundary: the tiling policy when
+    ``bm``/``bf`` are None, the caller's explicit hints (rounded up to
+    the SUBLANE/LANE alignment) otherwise — so a hint can no longer
+    trigger a recompile whose value is then second-guessed inside the
+    trace.
+
+    Differentiable: the custom VJP runs the fused backward kernel
+    (d_gate/d_up computed in VMEM via ``datapath.pair_act_grad``); the
+    unfused ``_glu_reference`` graph is the reference tests pin against.
+    """
+    m, _ = x.shape
+    f = wg.shape[1]
+    rbm, rbf = tiling.matmul_blocks(m, f)
+    # explicit hints are honored, rounded UP to the hardware alignment —
+    # an off-grid block (bf=32 < the 128 lane width) would mis-tile in
+    # compiled (non-interpret) mode
+    bm = rbm if bm is None else tiling.round_up(bm, tiling.SUBLANE)
+    bf = rbf if bf is None else tiling.round_up(bf, tiling.LANE)
+    return _fused_glu_jit(x, wg, wu, mode=mode, interpret=interpret,
+                          bm=bm, bf=bf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "interpret", "bm", "bf"))
+def _fused_glu_jit(x, wg, wu, *, mode: str, interpret: bool, bm: int,
+                   bf: int):
+    m, k = x.shape
+    f = wg.shape[1]
 
     def forward(x_, wg_, wu_):
         xp, _ = tiling.pad_dim(x_, 0, bm)
@@ -84,8 +151,16 @@ def fused_glu_pallas(x, wg, wu, *, mode: str = "silu",
         return forward(x_, wg_, wu_), (x_, wg_, wu_)
 
     def bwd(res, gy):
-        _, vjp = jax.vjp(lambda a, b, c: _glu_reference(a, b, c, mode), *res)
-        return vjp(gy)
+        x_, wg_, wu_ = res
+        dg, du = _glu_bwd_call(x_, wg_, wu_, gy, mode=mode, bm=bm, bf=bf,
+                               interpret=interpret)
+        xf = x_.astype(jnp.float32)
+        dx = (jnp.dot(dg, wg_.astype(jnp.float32).T)
+              + jnp.dot(du, wu_.astype(jnp.float32).T))
+        dwg = jnp.dot(xf.T, dg)
+        dwu = jnp.dot(xf.T, du)
+        return (dx.astype(x_.dtype), dwg.astype(wg_.dtype),
+                dwu.astype(wu_.dtype))
 
     run.defvjp(fwd, bwd)
     return run(x, wg, wu)

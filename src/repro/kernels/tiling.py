@@ -45,6 +45,16 @@ def fit_block(n: int, multiple: int, cap: int) -> int:
     return multiple
 
 
+def scratch_lanes(n: int) -> int:
+    """Lane extent for a VMEM scratch whose logical minor dim is ``n``.
+
+    Head dims off the 128 lane grid (MLA hv=72 style) must not shrink the
+    scratch tile below the hardware lane width — round up and let the
+    kernel body address the live ``[:, :n]`` slice.
+    """
+    return round_up(n, LANE)
+
+
 def pad_dim(x, axis: int, multiple: int, value=0.0):
     """Pad ``x`` along ``axis`` up to a multiple; returns (padded, pad)."""
     pad = (-x.shape[axis]) % multiple

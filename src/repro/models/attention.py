@@ -55,7 +55,12 @@ def _naive_sdpa(q, k, v, *, q_pos, kv_valid, causal=True,
     """Materialized-scores attention (the short-T / dual-mode path)."""
     b, s_q, t = q.shape[0], q.shape[1], k.shape[1]
     scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
-    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    # accumulate QK^T in f32 with the scale folded into q BEFORE the dot,
+    # exactly like the blocked paths — accumulating in the input dtype and
+    # casting after made bf16 naive attention diverge from flash
+    qf = q.astype(jnp.float32) * scale
+    scores = jnp.einsum("bskgh,btkh->bkgst", qf, k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
     t_pos = jnp.arange(t)[None, :]                          # (1,T) cache idx
     mask = kv_valid[:, None, :]                             # (B,1,T)
     if causal:

@@ -34,7 +34,18 @@ from repro.kernels import dispatch, tiling
 
 
 def flash_attention(q, k, v, *, q_pos, kv_valid, causal: bool = True,
-                    block: int = 1024, scale: float | None = None):
+                    block: int = 1024, scale: float | None = None,
+                    return_stats: bool = False):
+    """Blocked online-softmax attention (see module docstring).
+
+    ``return_stats=True`` additionally returns the per-row online-softmax
+    statistics ``(m, l)`` laid out (B, K, G, S): the running max and
+    normalizer of the PRE-SCALED masked scores.  This is the residual
+    contract the Pallas forward kernel saves for its backward kernels
+    (``kernels/flash_attention_bwd.py``) — exposed here so parity tests
+    can pin the kernel's saved statistics against the pure-JAX blocked
+    reference.
+    """
     b, s_q, kh, g, hd = q.shape
     t = k.shape[1]
     hv = v.shape[-1]
@@ -79,7 +90,10 @@ def flash_attention(q, k, v, *, q_pos, kv_valid, causal: bool = True,
     acc0 = jnp.zeros((b, kh, g, s_q, hv), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nb))
     out = dp.online_softmax_finish(l, acc)                     # (B,K,G,S,hv)
-    return jnp.moveaxis(out, 3, 1).astype(v.dtype)             # (B,S,K,G,hv)
+    out = jnp.moveaxis(out, 3, 1).astype(v.dtype)              # (B,S,K,G,hv)
+    if return_stats:
+        return out, m[..., 0], l[..., 0]                       # (B,K,G,S)
+    return out
 
 
 def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:

@@ -1,0 +1,230 @@
+"""Dedicated Pallas backward kernels (ISSUE 3 tentpole).
+
+Gradient parity: dq/dk/dv from the Pallas dq and dk/dv kernels (the
+default grad path of ``flash_attention_pallas``) must match the reference
+VJP through the pure-JAX blocked path (``models/flash.py``) AND through
+the naive materialized path, across GQA/MLA/ragged/non-divisible shapes
+and bf16 inputs.  Same for the fused GLU backward kernel vs the unfused
+``_glu_reference`` graph.  Plus the residual contract: the forward's
+saved per-row (m, l) statistics match the pure-JAX blocked reference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_ffn import _glu_reference, fused_glu_pallas
+from repro.models.attention import _naive_sdpa
+from repro.models.flash import flash_attention
+
+RNG = np.random.default_rng(23)
+
+
+def _mk(b, s, t, k, g, h, hv=None, dtype=jnp.float32):
+    hv = hv or h
+    q = jnp.asarray(RNG.normal(size=(b, s, k, g, h)), dtype)
+    kk = jnp.asarray(RNG.normal(size=(b, t, k, h)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, t, k, hv)), dtype)
+    return q, kk, v
+
+
+def _grads(fn, q, k, v, w):
+    """d(sum(fn * w))/d(q, k, v) — the random cotangent w exercises a
+    structured dO instead of the all-ones one."""
+    return jax.grad(
+        lambda q_, k_, v_: (fn(q_, k_, v_).astype(jnp.float32) * w).sum(),
+        argnums=(0, 1, 2))(q, k, v)
+
+
+def _check_bwd_parity(q, k, v, q_pos, kv_valid, causal, atol=1e-5,
+                      block=16, scale=None):
+    w = jnp.asarray(RNG.normal(size=(q.shape[0], q.shape[1], q.shape[2],
+                                     q.shape[3], v.shape[-1])), jnp.float32)
+    g_pl = _grads(lambda q_, k_, v_: flash_attention_pallas(
+        q_, k_, v_, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+        scale=scale, interpret=True), q, k, v, w)
+    g_jx = _grads(lambda q_, k_, v_: flash_attention(
+        q_, k_, v_, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+        scale=scale, block=block), q, k, v, w)
+    g_nv = _grads(lambda q_, k_, v_: _naive_sdpa(
+        q_, k_, v_, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+        scale=scale), q, k, v, w)
+    for name, a, b_, c in zip("dq dk dv".split(), g_pl, g_jx, g_nv):
+        assert bool(jnp.all(jnp.isfinite(a.astype(jnp.float32)))), name
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b_, np.float32),
+            atol=atol, err_msg=f"{name} vs models/flash.py reference VJP")
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(c, np.float32),
+            atol=atol, err_msg=f"{name} vs naive reference VJP")
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_bwd_gqa_groups(causal):
+    q, k, v = _mk(2, 64, 128, 2, 3, 16)        # GQA: G=3 groups per KV head
+    q_pos = jnp.broadcast_to(jnp.arange(64, 128)[None], (2, 64))
+    kv_valid = jnp.ones((2, 128), bool)
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, causal)
+
+
+def test_bwd_mla_style_hv_differs():
+    q, k, v = _mk(2, 32, 32, 4, 1, 24, hv=12)   # qk head 24, v head 12
+    q_pos = jnp.broadcast_to(jnp.arange(32)[None], (2, 32))
+    kv_valid = jnp.ones((2, 32), bool)
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, True, block=8)
+
+
+def test_bwd_hv_off_lane_grid():
+    """hv=72 exercises the lane-rounded scratch path in both directions."""
+    q, k, v = _mk(1, 16, 32, 1, 2, 16, hv=72)
+    q_pos = jnp.broadcast_to(jnp.arange(16, 32)[None], (1, 16))
+    kv_valid = jnp.ones((1, 32), bool)
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, True)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_bwd_ragged_kv_valid(causal):
+    q, k, v = _mk(2, 32, 96, 1, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(64, 96)[None], (2, 32))
+    kv_valid = jnp.asarray(RNG.random((2, 96)) > 0.3)
+    kv_valid = kv_valid.at[:, 0].set(True)
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, causal)
+
+
+@pytest.mark.parametrize("s,t", [(17, 33), (5, 100), (130, 259)])
+def test_bwd_non_divisible_lengths(s, t):
+    """S/T off the block grid: the backward pads dO/m/l/D up to the same
+    grid as the forward and phantom rows/keys must contribute exactly 0."""
+    q, k, v = _mk(1, s, t, 2, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(t - s, t)[None], (1, s))
+    kv_valid = jnp.ones((1, t), bool)
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, True)
+
+
+def test_bwd_explicit_scale_grad_flows():
+    """scale rides as a traced operand folded into q: its own gradient
+    must flow through the fold-in multiply around the scale-free kernels."""
+    q, k, v = _mk(1, 16, 16, 1, 1, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    kv_valid = jnp.ones((1, 16), bool)
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, True, scale=0.25)
+    g_sc = jax.grad(lambda sc: flash_attention_pallas(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, scale=sc,
+        interpret=True).sum())(jnp.float32(0.25))
+    g_ref = jax.grad(lambda sc: _naive_sdpa(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, scale=sc).sum())(
+        jnp.float32(0.25))
+    np.testing.assert_allclose(np.asarray(g_sc), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_bwd_bf16_inputs():
+    q, k, v = _mk(1, 32, 64, 2, 2, 16, dtype=jnp.bfloat16)
+    q_pos = jnp.broadcast_to(jnp.arange(32, 64)[None], (1, 32))
+    kv_valid = jnp.ones((1, 64), bool)
+    # bf16 cotangent/primal rounding dominates: compare at bf16 tolerance
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, True, atol=3e-2)
+    g = jax.grad(lambda q_: flash_attention_pallas(
+        q_, k, v, q_pos=q_pos, kv_valid=kv_valid,
+        interpret=True).astype(jnp.float32).sum())(q)
+    assert g.dtype == jnp.bfloat16
+
+
+def test_forward_saved_stats_match_pure_jax_reference():
+    """The residual contract: the kernel's saved (m, l) are the pure-JAX
+    blocked path's per-row online-softmax statistics, laid out (B,K,G,S)."""
+    q, k, v = _mk(2, 24, 40, 2, 2, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(16, 40)[None], (2, 24))
+    kv_valid = jnp.asarray(RNG.random((2, 40)) > 0.25)
+    kv_valid = kv_valid.at[:, 0].set(True)
+    o_pl, m_pl, l_pl = flash_attention_pallas(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, interpret=True,
+        return_stats=True)
+    o_jx, m_jx, l_jx = flash_attention(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, block=16,
+        return_stats=True)
+    assert m_pl.shape == m_jx.shape == (2, 2, 2, 24)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_jx),
+                               atol=1e-5)
+    # m is an order-independent max: exact; l may differ by f32 sum order
+    np.testing.assert_array_equal(np.asarray(m_pl), np.asarray(m_jx))
+    np.testing.assert_allclose(np.asarray(l_pl), np.asarray(l_jx),
+                               rtol=1e-6)
+
+
+def test_bwd_no_nans_under_all_masked_rows():
+    """Rows whose every key is user-invalid take the uniform MASK_VALUE
+    softmax in the forward; their backward must stay finite and match the
+    reference (which differentiates the same finite masking)."""
+    q, k, v = _mk(1, 8, 16, 1, 1, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(8, 16)[None], (1, 8))
+    kv_valid = jnp.zeros((1, 16), bool).at[:, :4].set(True)
+    kv_valid = kv_valid.at[0, :].set(False)   # batch row fully invalid
+    _check_bwd_parity(q, k, v, q_pos, kv_valid, False)
+
+
+# ---------------- fused GLU backward kernel ----------------
+
+@pytest.mark.parametrize("mode", ["silu", "gelu"])
+@pytest.mark.parametrize("m,k,f", [(16, 32, 64), (48, 20, 72),
+                                   (32, 100, 96)])
+def test_fused_glu_bwd_kernel_matches_reference(mode, m, k, f):
+    """d_wg/d_wu/dx through the fused backward kernel (pair_act_grad in
+    VMEM) vs the unfused reference graph's VJP."""
+    x = jnp.asarray(RNG.normal(size=(m, k)) * 0.5, jnp.float32)
+    wg = jnp.asarray(RNG.normal(size=(k, f)) / k ** 0.5, jnp.float32)
+    wu = jnp.asarray(RNG.normal(size=(k, f)) / k ** 0.5, jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(m, f)), jnp.float32)
+    gk = jax.grad(lambda *a: (fused_glu_pallas(
+        *a, mode=mode, interpret=True) * w).sum(), argnums=(0, 1, 2))(
+        x, wg, wu)
+    gr = jax.grad(lambda *a: (_glu_reference(*a, mode) * w).sum(),
+                  argnums=(0, 1, 2))(x, wg, wu)
+    for name, a, b in zip("dx dwg dwu".split(), gk, gr):
+        assert bool(jnp.all(jnp.isfinite(a))), name
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   err_msg=name)
+
+
+def test_pair_act_grad_is_the_datapath_derivative():
+    """datapath.pair_act_grad (the kernels' single float home of the
+    derivative) must equal jax.grad of datapath.pair_act elementwise."""
+    from repro.kernels import datapath as dp
+    z = jnp.linspace(-6, 6, 512)
+    for mode in ("silu", "gelu"):
+        want = jax.vmap(jax.grad(lambda t: dp.pair_act(t, mode)))(z)
+        got = dp.pair_act_grad(z, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+    with pytest.raises(ValueError):
+        dp.pair_act_grad(z, "relu")
+
+
+def test_fused_glu_bwd_bf16():
+    x = jnp.asarray(RNG.normal(size=(16, 32)) * 0.5, jnp.bfloat16)
+    wg = jnp.asarray(RNG.normal(size=(32, 64)) * 0.2, jnp.bfloat16)
+    wu = jnp.asarray(RNG.normal(size=(32, 64)) * 0.2, jnp.bfloat16)
+    gk = jax.grad(lambda *a: fused_glu_pallas(
+        *a, mode="silu", interpret=True).astype(jnp.float32).sum(),
+        argnums=(0, 1, 2))(x, wg, wu)
+    gr = jax.grad(lambda *a: _glu_reference(
+        *a, "silu").astype(jnp.float32).sum(), argnums=(0, 1, 2))(x, wg, wu)
+    for a, b in zip(gk, gr):
+        assert a.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=3e-2)
+
+
+def test_default_grad_path_is_the_pallas_bwd_kernel():
+    """The pure-JAX recompute must no longer be on the default grad path:
+    differentiating the Pallas forward must trace the dedicated backward
+    kernels (observable: the jaxpr of the VJP contains >1 pallas_call —
+    forward + dq + dkdv — where the recompute fallback had exactly 1)."""
+    q, k, v = _mk(1, 16, 16, 1, 1, 8)
+    q_pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    kv_valid = jnp.ones((1, 16), bool)
+    jaxpr = jax.make_jaxpr(jax.grad(lambda q_: flash_attention_pallas(
+        q_, k, v, q_pos=q_pos, kv_valid=kv_valid, interpret=True).sum()))(q)
+    n_pallas = str(jaxpr).count("pallas_call")
+    assert n_pallas >= 3, f"expected fwd+dq+dkdv pallas_calls, saw {n_pallas}"

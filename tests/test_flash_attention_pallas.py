@@ -114,6 +114,45 @@ def test_pallas_flash_mla_style_hv_differs():
     _check_all_paths(q, k, v, q_pos, kv_valid, True, block=8)
 
 
+def test_pallas_flash_hv_off_lane_grid():
+    """hv=72 is not a multiple of the 128 lane width: the f32 acc scratch
+    must round its lane dim up (tiling.scratch_lanes) and slice at emit —
+    an hv-sized scratch mis-tiles in compiled (non-interpret) mode."""
+    q, k, v = _mk(1, 16, 40, 2, 1, 16, hv=72)
+    q_pos = jnp.broadcast_to(jnp.arange(24, 40)[None], (1, 16))
+    kv_valid = jnp.ones((1, 40), bool)
+    _check_all_paths(q, k, v, q_pos, kv_valid, True)
+
+
+def test_naive_bf16_qk_accumulates_f32_matches_flash():
+    """bf16 naive attention used to accumulate QK^T in bf16 and only then
+    cast (jnp.einsum(...).astype(f32) * scale), diverging from the
+    blocked paths which pre-scale q in f32 — all three paths must now
+    agree at f32-accumulation tolerance, not bf16-accumulation error."""
+    q, k, v = _mk(2, 48, 64, 2, 2, 32)
+    q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    q_pos = jnp.broadcast_to(jnp.arange(16, 64)[None], (2, 48))
+    kv_valid = jnp.ones((2, 64), bool)
+    want = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=True)
+    got_pl = flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                    causal=True, interpret=True)
+    got_jx = flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                             causal=True, block=16)
+    # remaining difference is only the bf16 rounding of probs/output, not
+    # a bf16 score accumulation (which scales with T and head_dim)
+    np.testing.assert_allclose(np.asarray(got_pl, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got_jx, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+    # and the scores themselves are f32-accurate: compare against the f32
+    # oracle computed from upcast inputs
+    want_f32 = _naive_sdpa(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), q_pos=q_pos,
+                           kv_valid=kv_valid, causal=True)
+    np.testing.assert_allclose(np.asarray(want, np.float32),
+                               np.asarray(want_f32), atol=2e-2)
+
+
 def test_pallas_flash_explicit_blocks_and_dtype():
     q, k, v = _mk(1, 64, 64, 2, 2, 16)
     q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))

@@ -75,6 +75,32 @@ def test_fused_glu_grad_matches_unfused_reference():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
+def test_fused_glu_blocks_resolve_before_jit_no_recompile():
+    """bm/bf used to be jit-static kwargs that tiling.matmul_blocks then
+    second-guessed inside the trace: every distinct caller hint compiled
+    a new kernel whose requested value was partially ignored.  Blocks now
+    resolve BEFORE the jit boundary, so the default and an explicit hint
+    equal to the resolved default share ONE cache entry — and explicit
+    hints are honored (rounded up to the hardware alignment)."""
+    from repro.kernels import tiling
+    from repro.kernels.fused_ffn import _fused_glu_jit
+    x = jnp.asarray(RNG.normal(size=(48, 32)) * 0.5, jnp.float32)
+    wg = jnp.asarray(RNG.normal(size=(32, 64)) * 0.2, jnp.float32)
+    wu = jnp.asarray(RNG.normal(size=(32, 64)) * 0.2, jnp.float32)
+    rbm, rbf = tiling.matmul_blocks(48, 64)
+    base = _fused_glu_jit._cache_size()
+    y0 = fused_glu_pallas(x, wg, wu, interpret=True)            # policy
+    y1 = fused_glu_pallas(x, wg, wu, interpret=True,
+                          bm=rbm, bf=rbf)                       # same blocks
+    assert _fused_glu_jit._cache_size() - base <= 1
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    # an explicit different hint IS honored (new compilation, same math)
+    y2 = fused_glu_pallas(x, wg, wu, interpret=True, bm=16, bf=32)
+    np.testing.assert_allclose(np.asarray(y2),
+                               np.asarray(fused_glu_ref(x, wg, wu)),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_fused_glu_odd_tiles():
     """Block pickers must handle non-power-of-two dims."""
     x = jnp.asarray(RNG.normal(size=(48, 20)), jnp.float32)

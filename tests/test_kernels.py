@@ -30,6 +30,23 @@ def test_softmax_kernel_float_close(shape):
                                atol=3e-6)
 
 
+def test_softmax_kernel_float_row_pad_is_finite_no_debug_nan():
+    """Phantom ROWS (row count off the block grid) used to pad with the
+    float column value -inf, so the kernel computed (-inf) - (-inf) = NaN
+    on rows that were then sliced off — poisoning jax.debug_nans runs.
+    Rows must pad with a finite value; only the column tail needs the
+    no-mass pad."""
+    x = jnp.asarray(RNG.normal(size=(5, 40)) * 4, jnp.float32)  # 5 rows: pads
+    prev = jax.config.jax_debug_nans
+    jax.config.update("jax_debug_nans", True)
+    try:
+        y = dk.softmax_pallas(x, precision="float", interpret=True)
+    finally:
+        jax.config.update("jax_debug_nans", prev)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.softmax_exact(x)), atol=3e-6)
+
+
 def test_softmax_kernel_float_pad_captures_no_mass():
     """Float-path column padding must be -inf, not the finite MASK_VALUE:
     rows whose true scores all sit below -30 must still sum to 1 on
