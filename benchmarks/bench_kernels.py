@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -215,8 +217,90 @@ def main_flash_bwd(json_path: str | None = None) -> None:
         print(f"# wrote {os.path.abspath(json_path)}")
 
 
+def main_flash_ring(json_path: str | None = None, ring_devices: int = 8
+                    ) -> None:
+    """Ring shoot-out: sequence-parallel flash_ring on an emulated
+    ring-devices-wide mesh vs the single-device Pallas kernel, with the
+    per-hop-count parity residual recorded.
+
+    Needs >= ring_devices devices; off-TPU with a single CPU device it
+    re-execs itself in a child with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` set, so
+    ``python -m benchmarks.bench_kernels`` works from any host.  Records
+    BENCH_flash_ring.json: tokens/s for both paths (interpret mode off
+    TPU — a correctness checkpoint, not a speed claim) and the max
+    |ring - single-device| output residual per ring width (1/2/4/8
+    hops), i.e. the merge's split-point invariance at kernel scale.
+    """
+    if len(jax.devices()) < ring_devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{ring_devices}").strip()
+        # force cpu: the device-count flag only affects the host platform,
+        # so inheriting e.g. JAX_PLATFORMS=tpu would re-exec forever
+        env["JAX_PLATFORMS"] = "cpu"
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_kernels",
+             "--ring-only", json_path or "BENCH_flash_ring.json"],
+            check=True, env=env)
+        return
+
+    from repro.kernels.ring_attention import ring_flash_attention
+    from repro.launch.mesh import auto_mesh
+
+    rng = np.random.default_rng(0)
+    b, s, k, g, h = 1, 1024, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, k, g, h)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, k, h)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    valid = jnp.ones((b, s), bool)
+
+    single = lambda q_, k_, v_: flash_attention_pallas(
+        q_, k_, v_, q_pos=q_pos, kv_valid=valid)
+    out_single = jax.block_until_ready(single(q, kk, v))
+    t_single = time_fn(single, q, kk, v, iters=3)
+
+    results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
+                         "head_dim": h},
+               "backend": jax.default_backend(),
+               "n_devices": len(jax.devices()),
+               "us_per_call": {"flash_pallas_1dev": t_single},
+               "tokens_per_s": {"flash_pallas_1dev": b * s / t_single * 1e6},
+               "parity_max_abs_vs_1dev_by_hops": {}}
+    emit("kernels/flash_ring_single_us", t_single,
+         f"backend={jax.default_backend()}")
+    hops = 2
+    while hops <= results["n_devices"]:
+        mesh = auto_mesh((hops,), ("model",))
+        ring = lambda q_, k_, v_: ring_flash_attention(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid, mesh=mesh)
+        out_ring = jax.block_until_ready(ring(q, kk, v))
+        parity = float(jnp.abs(out_ring - out_single).max())
+        t_ring = time_fn(ring, q, kk, v, iters=3)
+        results["us_per_call"][f"flash_ring_{hops}dev"] = t_ring
+        results["tokens_per_s"][f"flash_ring_{hops}dev"] = \
+            b * s / t_ring * 1e6
+        results["parity_max_abs_vs_1dev_by_hops"][str(hops)] = parity
+        emit(f"kernels/flash_ring_{hops}dev_us", t_ring,
+             f"parity_vs_1dev={parity:.2e}")
+        hops *= 2
+    assert max(results["parity_max_abs_vs_1dev_by_hops"].values()) <= 1e-5
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+
+
 if __name__ == "__main__":
+    if "--ring-only" in sys.argv:
+        i = sys.argv.index("--ring-only")
+        main_flash_ring(sys.argv[i + 1] if len(sys.argv) > i + 1
+                        else "BENCH_flash_ring.json")
+        sys.exit(0)
     main()
     main_flash("BENCH_flash.json")
     main_flash_int("BENCH_flash_int.json")
     main_flash_bwd("BENCH_flash_bwd.json")
+    main_flash_ring("BENCH_flash_ring.json")

@@ -89,8 +89,17 @@ class ModelConfig:
     #   flash_pallas_int Pallas blocked BIT-ACCURATE unit
     #                    (kernels/flash_attention_int.py); requires
     #                    softmax_impl='dualmode'
+    #   flash_ring       sequence-parallel ring flash attention
+    #                    (kernels/ring_attention.py): KV shards rotate
+    #                    over the `ring_axis` mesh axis via ppermute
     # resolution refuses float blocked impls + softmax_impl='dualmode'
     attn_impl: str = "auto"
+    # mesh axis for sequence-parallel ring attention ("" = off).  When
+    # set (usually "model"), attn_impl='auto' upgrades its blocked picks
+    # to 'flash_ring' whenever the ambient mesh carries the axis and the
+    # sequence dims divide it — long-context prefill shards the KV
+    # sequence instead of replicating 32k-deep caches per chip.
+    ring_axis: str = ""
     # gated-MLP execution: dense | fused_pallas (kernels/fused_ffn.py)
     ffn_impl: str = "dense"
     moe_dispatch: str = "sort"      # sort | dense

@@ -208,16 +208,35 @@ def logits_pspec(mesh: Mesh, global_batch: int, vocab: int) -> P:
     return P(_dp_axis(mesh, global_batch), None, _axis(mesh, "model", vocab))
 
 
-def cache_pspecs(caches: Params, mesh: Mesh, global_batch: int) -> Params:
+def cache_pspecs(caches: Params, mesh: Mesh, global_batch: int,
+                 ring_axis: str | None = None) -> Params:
     """Specs for KV/state cache trees (from ``init_caches`` eval_shape).
 
-    Batch shards over DP when divisible.  When it is not (long_500k B=1),
-    the *sequence* dim of KV caches shards over 'data' instead — sequence
-    parallelism; attention contractions over the seq dim become GSPMD
-    reduce-scatters.  Head / channel dims shard over 'model'.
+    Batch shards over DP when divisible.  The *sequence* dim of KV
+    caches shards over ``ring_axis`` when given (sequence-parallel ring
+    attention: each device owns one contiguous KV block and
+    ``kernels/ring_attention.py`` rotates them) — guarded, so a
+    non-divisible sequence replicates instead of silently padding — and
+    otherwise over 'data' when the batch is unshardable (long_500k B=1):
+    attention contractions over the seq dim become GSPMD
+    reduce-scatters.  Head / channel dims shard over 'model', except
+    when the ring already placed the sequence there — one axis is never
+    booked twice in a spec.
     """
     dp = _dp_axis(mesh, global_batch)
     seq_sp = dp is None          # SP fallback for unshardable batch
+    batch_axes = (set() if dp is None
+                  else set(dp) if isinstance(dp, tuple) else {dp})
+
+    def sq(d):
+        """Guarded KV-sequence axis: explicit ring axis first (never
+        double-booking a batch axis), then the data-SP fallback."""
+        if (ring_axis and ring_axis not in batch_axes
+                and _axis(mesh, ring_axis, d)):
+            return ring_axis
+        if seq_sp:
+            return _axis(mesh, "data", d)
+        return None
 
     def rule(path, leaf):
         names = _path_names(path)
@@ -228,14 +247,14 @@ def cache_pspecs(caches: Params, mesh: Mesh, global_batch: int) -> Params:
         lname = names[-1]
         lead = [None] * n_extra
         mdl = lambda d: _axis(mesh, "model", d)
-        sq = (lambda d: _axis(mesh, "data", d)) if seq_sp else (lambda d: None)
         if lname in ("k", "v") and len(dims) == 4:      # (B,S,K,hd)
-            kh = mdl(dims[2])
+            s_ax = sq(dims[1])
+            kh = None if s_ax == "model" else mdl(dims[2])
             # kv heads rarely divide a 16-wide axis (GQA: 4-8 heads) —
             # fall back to sharding head_dim, else the 32k-deep caches
             # replicate over 'model' (measured 40 GB/chip at qwen3 decode)
-            hd = None if kh else mdl(dims[3])
-            return P(*lead, dp, sq(dims[1]), kh, hd)
+            hd = None if (kh or s_ax == "model") else mdl(dims[3])
+            return P(*lead, dp, s_ax, kh, hd)
         if lname == "ckv" and len(dims) == 3:           # (B,S,r) MLA latent
             return P(*lead, dp, sq(dims[1]), None)
         if lname == "krope" and len(dims) == 3:

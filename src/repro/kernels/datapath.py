@@ -146,3 +146,49 @@ def online_softmax_update(m, l, s):
 def online_softmax_finish(l, acc):
     """Final normalization: acc holds sum_j p_j v_j, l the (..., 1) sums."""
     return acc / jnp.maximum(l, 1e-30)
+
+
+def online_softmax_partial(s, v=None):
+    """Self-contained partial state (m, l, acc) of one block of keys.
+
+    ``s`` (..., N) are this block's masked scores, ``v`` (..., N, d) the
+    matching values (``None`` -> probability-only partial, acc (..., N) =
+    the unnormalized probabilities themselves).  ``m`` is clamped at
+    MASK_VALUE — the same floor the streamed paths start their running
+    max from — so all-phantom blocks (every score -inf) produce the empty
+    sentinel instead of NaN probabilities.
+    """
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), MASK_VALUE)
+    p = jnp.exp2((s - m) * LOG2E)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = p if v is None else jnp.einsum("...n,...nd->...d", p, v)
+    return m, l, acc
+
+
+def online_softmax_merge(part_a, part_b):
+    """Merge two online-softmax partial states — the ring-attention fold.
+
+    Each part is ``(m, l, acc)`` with ``m``/``l`` shaped (..., 1) and
+    ``acc`` (..., d): the running max, normalizer and UNNORMALIZED
+    weighted-value accumulator over a subset of keys (``acc = out * l``
+    recovers it from a finished block).  The combine is the associative,
+    commutative monoid operation of the Milakov–Gimelshein recurrence —
+    per-shard partials merge EXACTLY regardless of how the key set was
+    split, which is the algebraic fact sequence-parallel ring attention
+    (``kernels/ring_attention.py``) relies on:
+
+        m  = max(m_a, m_b)
+        l  = l_a * 2**((m_a-m)·log2e) + l_b * 2**((m_b-m)·log2e)
+        acc likewise.
+
+    Identity element: ``(MASK_VALUE, 0, 0)`` — the empty-shard sentinel
+    (the float twin of the int path's PHANTOM_Q): every streamed path
+    initializes its running max at MASK_VALUE, so partials never carry a
+    smaller max and merging the sentinel is a bit-exact no-op.
+    """
+    m_a, l_a, acc_a = part_a
+    m_b, l_b, acc_b = part_b
+    m = jnp.maximum(m_a, m_b)
+    c_a = jnp.exp2((m_a - m) * LOG2E)
+    c_b = jnp.exp2((m_b - m) * LOG2E)
+    return m, l_a * c_a + l_b * c_b, acc_a * c_a + acc_b * c_b

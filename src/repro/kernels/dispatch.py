@@ -5,7 +5,7 @@ consumers, so model code never switches on strings itself:
 
   softmax    'float' | 'dualmode'            (attention probabilities)
   attention  'auto' | 'naive' | 'flash' | 'flash_pallas'
-             | 'flash_pallas_int'
+             | 'flash_pallas_int' | 'flash_ring'
   activation 'gelu_exact' | ... (delegates to repro.core.activations)
   ffn        'dense' | 'fused_pallas'        (gated-MLP execution)
 
@@ -13,6 +13,7 @@ Providers register themselves at import time (``models/attention.py``
 registers 'naive', ``models/flash.py`` registers 'flash' and the 'auto'
 rule, ``kernels/flash_attention.py`` registers 'flash_pallas',
 ``kernels/flash_attention_int.py`` registers 'flash_pallas_int',
+``kernels/ring_attention.py`` registers 'flash_ring',
 ``kernels/fused_ffn.py`` registers 'fused_pallas') — the registry itself
 imports nothing from ``models``, which keeps the layering acyclic:
 datapath -> kernels -> dispatch -> models.
@@ -20,8 +21,14 @@ datapath -> kernels -> dispatch -> models.
 Attention resolution is softmax-aware: ``softmax_impl='dualmode'`` can
 never be silently dropped.  'auto' + dualmode routes blocked shapes to
 the bit-accurate Pallas int kernel; an EXPLICIT float blocked impl
-('flash' / 'flash_pallas') + dualmode raises instead of quietly running
-the fp32 datapath.
+('flash' / 'flash_pallas' / 'flash_ring') + dualmode raises instead of
+quietly running the fp32 datapath.
+
+Resolution is also mesh-aware when the caller opts in with a
+``ring_axis``: when 'auto' would stream a float blocked path AND the
+ambient ``with mesh:`` context shards the KV sequence over that axis
+(both sequence dims divisible), the pick upgrades to 'flash_ring' — the
+sequence-parallel ring composition of the same kernel.
 """
 from __future__ import annotations
 
@@ -75,18 +82,46 @@ _ATTENTION_AUTO: list[Callable] = []   # single slot: (s_q, t) -> impl name
 # blocked impls that run the float log-domain datapath by construction —
 # resolution refuses to pair these with softmax_impl='dualmode' (the
 # bit-accurate words come from 'naive' or 'flash_pallas_int')
-FLOAT_BLOCKED_ATTENTION = frozenset({"flash", "flash_pallas"})
+FLOAT_BLOCKED_ATTENTION = frozenset({"flash", "flash_pallas", "flash_ring"})
+
+
+def ambient_mesh():
+    """The active ``with mesh:`` context's Mesh, or None.
+
+    The ring-attention provider and the 'auto' ring upgrade read the
+    mesh from here, so model code threads only the ``ring_axis`` string
+    (configs stay pure data) and the same resolution works at trace
+    time inside jit."""
+    try:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):     # pragma: no cover
+        return None
+    return None if mesh is None or mesh.empty else mesh
+
+
+def ring_axis_size(ring_axis: str | None) -> int:
+    """Size of ``ring_axis`` on the ambient mesh (0 when absent/unset)."""
+    if not ring_axis:
+        return 0
+    mesh = ambient_mesh()
+    if mesh is None or ring_axis not in mesh.axis_names:
+        return 0
+    return mesh.shape[ring_axis]
 
 
 def register_attention(name: str, fn: Callable) -> None:
-    """fn(q, k, v, *, q_pos, kv_valid, causal, scale, softmax_impl)
-    -> (B,S,K,G,hv).
+    """fn(q, k, v, *, q_pos, kv_valid, causal, scale, softmax_impl,
+    ring_axis) -> (B,S,K,G,hv).
 
-    Every implementation takes the full contract.  'naive' honors any
-    ``softmax_impl``; the float blocked ones ('flash', 'flash_pallas')
-    are the float log-domain form by construction and are never resolved
-    with 'dualmode' (see :func:`resolve_attention`); 'flash_pallas_int'
-    IS the dual-mode unit streamed and requires 'dualmode'."""
+    Every implementation takes the full contract (``ring_axis`` names
+    the mesh axis the sequence-parallel ring rotates over; only
+    'flash_ring' acts on it, the others accept and ignore it).  'naive'
+    honors any ``softmax_impl``; the float blocked ones ('flash',
+    'flash_pallas', 'flash_ring') are the float log-domain form by
+    construction and are never resolved with 'dualmode' (see
+    :func:`resolve_attention`); 'flash_pallas_int' IS the dual-mode unit
+    streamed and requires 'dualmode'."""
     _ATTENTION[name] = fn
 
 
@@ -101,11 +136,13 @@ def _load_attention_providers() -> None:
     must not depend on having imported ``repro.models`` first."""
     import repro.kernels.flash_attention      # noqa: F401
     import repro.kernels.flash_attention_int  # noqa: F401
+    import repro.kernels.ring_attention       # noqa: F401
     import repro.models.attention             # noqa: F401  (naive+flash+rule)
 
 
 def resolve_attention(impl: str, s_q: int, t_kv: int,
-                      softmax_impl: str = "float") -> str:
+                      softmax_impl: str = "float",
+                      ring_axis: str | None = None) -> str:
     """Resolve 'auto' to a concrete implementation name.
 
     Softmax-aware: 'dualmode' is a numerics contract, so resolution
@@ -114,11 +151,20 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
       * 'auto' + 'dualmode': short rows stay 'naive' (whole-row unit);
         shapes the auto rule would stream go to 'flash_pallas_int'
         (the unit's blocked three-sweep kernel), never a float path.
-      * explicit 'flash'/'flash_pallas' + 'dualmode': ValueError — these
-        run the float datapath by construction, and silently dropping
-        the unit is exactly the bug this guard exists to prevent.
+      * explicit 'flash'/'flash_pallas'/'flash_ring' + 'dualmode':
+        ValueError — these run the float datapath by construction, and
+        silently dropping the unit is exactly the bug this guard exists
+        to prevent.  (auto + dualmode on a ring mesh therefore streams
+        through the single-device int kernel; a dual-mode ring is open.)
       * explicit 'flash_pallas_int' + anything but 'dualmode': ValueError
         (the kernel is the unit; it cannot produce float-path words).
+
+    Mesh-aware (opt-in): with a non-empty ``ring_axis``, an 'auto' pick
+    of a float blocked path upgrades to 'flash_ring' when the ambient
+    ``with mesh:`` context carries that axis with size > 1 and both
+    sequence dims divide it — the shapes where the KV sequence actually
+    shards.  Configs opt in via ``ModelConfig.ring_axis``; the default
+    (``""``) never changes today's resolution.
     """
     if impl == "auto" and not _ATTENTION_AUTO:
         _load_attention_providers()
@@ -126,6 +172,10 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
         impl = _ATTENTION_AUTO[0](s_q, t_kv) if _ATTENTION_AUTO else "naive"
         if softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
             impl = "flash_pallas_int"
+        elif impl in ("flash", "flash_pallas"):
+            n = ring_axis_size(ring_axis)
+            if n > 1 and s_q % n == 0 and t_kv % n == 0:
+                impl = "flash_ring"
     elif softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
         raise ValueError(
             f"attn_impl={impl!r} runs the float log-domain datapath and "

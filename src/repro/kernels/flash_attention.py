@@ -273,7 +273,7 @@ def _flash_pallas_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
 
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
-                     softmax_impl="float"):
+                     softmax_impl="float", ring_axis=""):
     if softmax_impl == "dualmode":
         raise ValueError(
             "attn_impl='flash_pallas' is the float blocked kernel and "

@@ -185,7 +185,7 @@ def flash_attention_pallas_int(q, k, v, *, q_pos, kv_valid,
 
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
-                     softmax_impl="dualmode"):
+                     softmax_impl="dualmode", ring_axis=""):
     if softmax_impl != "dualmode":
         raise ValueError(
             "attn_impl='flash_pallas_int' IS the bit-accurate unit; it "

@@ -114,7 +114,7 @@ def build_cell(arch_id: str, shape_name: str, mesh: Mesh, *,
     p_sds = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg, dtype))
     p_spec = param_pspecs(p_sds, mesh, fsdp=False, profile=profile)
     c_sds = jax.eval_shape(lambda: init_caches(cfg, b, s, dtype))
-    c_spec = cache_pspecs(c_sds, mesh, b)
+    c_spec = cache_pspecs(c_sds, mesh, b, ring_axis=cfg.ring_axis or None)
     # residual-stream pin for serving: batch over dp.  Under the 'dp'
     # profile the 'model' axis would otherwise sit idle and every rank
     # duplicates the compute (measured 16x flops bloat on whisper

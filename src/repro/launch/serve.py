@@ -24,14 +24,24 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ring-devices", type=int, default=0,
+                    help="shard long-context prefill KV over a ring of "
+                         "this many local devices (0 = off; off-TPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count accordingly)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = (registry.reduced_config(args.arch) if args.reduced
            else registry.get_config(args.arch))
+    mesh = None
+    if args.ring_devices:
+        from repro.launch.mesh import auto_mesh
+        cfg = cfg.replace(ring_axis="model")
+        mesh = auto_mesh((args.ring_devices,), ("model",))
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
     eng = ServeEngine(cfg, params, n_slots=args.slots,
-                      max_seq=args.max_seq, seed=args.seed)
+                      max_seq=args.max_seq, mesh=mesh, seed=args.seed)
     rng = jax.random.PRNGKey(args.seed + 1)
     reqs = []
     for i in range(args.requests):

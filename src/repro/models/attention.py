@@ -16,6 +16,7 @@ from repro.kernels import datapath as dp
 from repro.kernels import dispatch
 from repro.kernels import flash_attention as _pallas_flash      # noqa: F401
 from repro.kernels import flash_attention_int as _pallas_int    # noqa: F401
+from repro.kernels import ring_attention as _pallas_ring        # noqa: F401
 from . import flash as _flash                                   # noqa: F401
 from .layers import (Params, apply_rope, linear, linear_init, rmsnorm,
                      rmsnorm_init)
@@ -32,7 +33,12 @@ class AttnSpec(NamedTuple):
     softmax_impl: str = "float"
     causal: bool = True
     use_rope: bool = True     # Jamba attends without positional encoding
-    attn_impl: str = "auto"   # auto|naive|flash|flash_pallas|flash_pallas_int
+    # auto|naive|flash|flash_pallas|flash_pallas_int|flash_ring
+    attn_impl: str = "auto"
+    # mesh axis the sequence-parallel ring rotates over ("" = ring off):
+    # opts 'auto' into resolving flash_ring when the ambient mesh shards
+    # the KV sequence dim over this axis
+    ring_axis: str = ""
 
 
 class MLASpec(NamedTuple):
@@ -46,12 +52,14 @@ class MLASpec(NamedTuple):
     rope_theta: float = 10000.0
     softmax_impl: str = "float"
     attn_impl: str = "auto"
+    ring_axis: str = ""
 
 
 # ---------------- shared core ----------------
 
 def _naive_sdpa(q, k, v, *, q_pos, kv_valid, causal=True,
-                scale: float | None = None, softmax_impl: str = "float"):
+                scale: float | None = None, softmax_impl: str = "float",
+                ring_axis: str = ""):
     """Materialized-scores attention (the short-T / dual-mode path)."""
     b, s_q, t = q.shape[0], q.shape[1], k.shape[1]
     scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
@@ -75,13 +83,14 @@ def _naive_sdpa(q, k, v, *, q_pos, kv_valid, causal=True,
 dispatch.register_attention(
     "naive",
     lambda q, k, v, *, q_pos, kv_valid, causal, scale,
-    softmax_impl="float": _naive_sdpa(
+    softmax_impl="float", ring_axis="": _naive_sdpa(
         q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal, scale=scale,
         softmax_impl=softmax_impl))
 
 
 def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
-          scale: float | None = None, attn_impl: str = "auto"):
+          scale: float | None = None, attn_impl: str = "auto",
+          ring_axis: str = ""):
     """q: (B,S,K,G,h)  k/v: (B,T,K,hk)/(B,T,K,hv)  q_pos: (B,S)
     kv_valid: (B,T) bool.
 
@@ -102,10 +111,11 @@ def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
     """
     s_q, t = q.shape[1], k.shape[1]
     impl = dispatch.resolve_attention(attn_impl, s_q, t,
-                                      softmax_impl=softmax_impl)
+                                      softmax_impl=softmax_impl,
+                                      ring_axis=ring_axis)
     return dispatch.get_attention(impl)(
         q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
-        scale=scale, softmax_impl=softmax_impl)
+        scale=scale, softmax_impl=softmax_impl, ring_axis=ring_axis)
 
 
 def _write_seq(buf, new, pos):
@@ -182,7 +192,7 @@ def gqa_apply(p: Params, s: AttnSpec, x, *, positions, cache=None, pos=0):
     qg = q.reshape(b, sl, s.n_kv_heads, g, s.head_dim)
     o = _sdpa(qg, k_all, v_all, q_pos=positions, kv_valid=kv_valid,
               softmax_impl=s.softmax_impl, causal=s.causal,
-              attn_impl=s.attn_impl)
+              attn_impl=s.attn_impl, ring_axis=s.ring_axis)
     o = o.reshape(b, sl, s.n_heads * s.head_dim)
     return linear(p["wo"], o), cache
 
@@ -255,7 +265,8 @@ def mla_apply(p: Params, s: MLASpec, x, *, positions, cache=None, pos=0):
                                   (b, t, s.n_heads, s.rope_dim))], axis=-1)
     o = _sdpa(q_cat, k_cat, v, q_pos=positions, kv_valid=kv_valid,
               softmax_impl=s.softmax_impl, causal=True,
-              scale=1.0 / qk_head ** 0.5, attn_impl=s.attn_impl)
+              scale=1.0 / qk_head ** 0.5, attn_impl=s.attn_impl,
+              ring_axis=s.ring_axis)
     o = o.reshape(b, sl, s.n_heads * s.v_dim)
     return linear(p["wo"], o), cache
 
@@ -286,5 +297,5 @@ def cross_apply(p: Params, s: AttnSpec, x, kv: Params):
     valid = jnp.ones((b, t), dtype=bool)
     o = _sdpa(q, kv["k"], kv["v"], q_pos=jnp.zeros((b, sl), jnp.int32),
               kv_valid=valid, softmax_impl=s.softmax_impl, causal=False,
-              attn_impl=s.attn_impl)
+              attn_impl=s.attn_impl, ring_axis=s.ring_axis)
     return linear(p["wo"], o.reshape(b, sl, s.n_heads * s.head_dim))

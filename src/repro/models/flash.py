@@ -96,6 +96,45 @@ def flash_attention(q, k, v, *, q_pos, kv_valid, causal: bool = True,
     return out
 
 
+def flash_attention_merged(q, k, v, *, q_pos, kv_valid, n_splits: int,
+                           causal: bool = True, scale: float | None = None,
+                           block: int = 1024):
+    """Ring-attention oracle on ONE host: split KV into ``n_splits``
+    contiguous shards, run the blocked reference per shard (each shard
+    sees shard-local key positions, so ``q_pos`` is shifted by the
+    shard's offset — exactly what a ring hop does), convert each
+    finished shard back to its unnormalized partial ``(m, l, o*l)`` and
+    fold with :func:`repro.kernels.datapath.online_softmax_merge`.
+
+    This is the pure-JAX home of the partial-merge contract: the Pallas
+    ring kernel (``kernels/ring_attention.py``) is this fold run across
+    devices, and the merge's split-point invariance — the output must
+    not depend on ``n_splits`` — is what the property tests pin.
+    """
+    t = k.shape[1]
+    assert t % n_splits == 0, (t, n_splits)
+    t_loc = t // n_splits
+    scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
+    qf = q.astype(jnp.float32) * scale
+
+    part = None
+    for i in range(n_splits):
+        sl = slice(i * t_loc, (i + 1) * t_loc)
+        o_i, m_i, l_i = flash_attention(
+            qf, k[:, sl], v[:, sl], q_pos=q_pos - i * t_loc,
+            kv_valid=kv_valid[:, sl], causal=causal, scale=1.0,
+            block=min(block, t_loc), return_stats=True)
+        # (B,K,G,S) stats -> (B,S,K,G,1) merge layout; o*l recovers the
+        # shard's unnormalized accumulator
+        m_i = jnp.moveaxis(m_i, 3, 1)[..., None]
+        l_i = jnp.moveaxis(l_i, 3, 1)[..., None]
+        part_i = (m_i, l_i, o_i.astype(jnp.float32) * l_i)
+        part = part_i if part is None else dp.online_softmax_merge(
+            part, part_i)
+    _, l, acc = part
+    return dp.online_softmax_finish(l, acc).astype(v.dtype)
+
+
 def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:
     """Blocked path when the scores tensor would exceed ~16 MB f32/head.
 
@@ -104,7 +143,7 @@ def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:
 
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
-                     softmax_impl="float"):
+                     softmax_impl="float", ring_axis=""):
     if softmax_impl == "dualmode":
         raise ValueError(
             "attn_impl='flash' is the float blocked path and cannot honor "

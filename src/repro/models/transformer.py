@@ -38,7 +38,8 @@ def attn_spec(cfg: ModelConfig, causal: bool | None = None) -> AttnSpec:
                     qk_norm=cfg.qk_norm, qkv_bias=cfg.qkv_bias,
                     rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl,
                     causal=cfg.causal if causal is None else causal,
-                    use_rope=cfg.use_rope, attn_impl=cfg.attn_impl)
+                    use_rope=cfg.use_rope, attn_impl=cfg.attn_impl,
+                    ring_axis=cfg.ring_axis)
 
 
 def mla_spec(cfg: ModelConfig) -> MLASpec:
@@ -46,7 +47,7 @@ def mla_spec(cfg: ModelConfig) -> MLASpec:
     return MLASpec(cfg.d_model, cfg.n_heads, m.q_lora_rank, m.kv_lora_rank,
                    m.nope_dim, m.rope_dim, m.v_dim,
                    rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl,
-                   attn_impl=cfg.attn_impl)
+                   attn_impl=cfg.attn_impl, ring_axis=cfg.ring_axis)
 
 
 def mamba_spec(cfg: ModelConfig) -> MambaSpec:

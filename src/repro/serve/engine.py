@@ -23,6 +23,7 @@ own kernels instead of both trailing the model default.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable
 
@@ -120,11 +121,17 @@ class ServeEngine:
                  prefill_buckets: tuple[int, ...] = (32, 128, 512),
                  prefill_attn_impl: str | None = None,
                  decode_attn_impl: str | None = None,
-                 seed: int = 0):
+                 mesh=None, seed: int = 0):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.eos_id = eos_id
         self.dtype = dtype
+        # optional device mesh: per-phase resolution AND the compiled
+        # programs trace under `with mesh:`, so a cfg with ring_axis set
+        # resolves long-context prefill to the sequence-parallel ring
+        # path (decode stays s_q=1 -> naive) and the flash_ring provider
+        # finds the same mesh ambient at trace time
+        self.mesh = mesh
         self.buckets = tuple(b for b in sorted(prefill_buckets)
                              if b <= max_seq) or (max_seq,)
         # state-carrying mixers (mamba/rwkv) integrate every input token —
@@ -142,12 +149,25 @@ class ServeEngine:
         # a dualmode config routes to the bit-accurate paths instead of
         # silently running the float ones.
         prefill_sq = max_seq if self._exact_prefill else self.buckets[-1]
-        self.prefill_attn_impl = dispatch.resolve_attention(
-            prefill_attn_impl or cfg.attn_impl, prefill_sq, max_seq,
-            softmax_impl=cfg.softmax_impl)
-        self.decode_attn_impl = dispatch.resolve_attention(
-            decode_attn_impl or cfg.attn_impl, 1, max_seq,
-            softmax_impl=cfg.softmax_impl)
+        with self._mesh_ctx():
+            # the compiled prefill runs at EVERY bucket, so the ring is
+            # only offered to 'auto' when each bucket (and the cache
+            # depth) divides the ring width — resolving on the widest
+            # bucket alone would bake flash_ring into a program that a
+            # smaller bucket then crashes.  Exact-length prefill
+            # (mamba/rwkv hybrids) sees arbitrary prompt lengths and
+            # never rings; decode is s_q=1 and can't either.
+            n = dispatch.ring_axis_size(cfg.ring_axis)
+            ring_ok = (not self._exact_prefill and n > 1
+                       and max_seq % n == 0
+                       and all(b % n == 0 for b in self.buckets))
+            self.prefill_attn_impl = dispatch.resolve_attention(
+                prefill_attn_impl or cfg.attn_impl, prefill_sq, max_seq,
+                softmax_impl=cfg.softmax_impl,
+                ring_axis=cfg.ring_axis if ring_ok else "")
+            self.decode_attn_impl = dispatch.resolve_attention(
+                decode_attn_impl or cfg.attn_impl, 1, max_seq,
+                softmax_impl=cfg.softmax_impl)
         self._prefill = jax.jit(make_prefill_step(
             cfg.replace(attn_impl=self.prefill_attn_impl)))
         self._decode = jax.jit(make_decode_step(
@@ -158,6 +178,10 @@ class ServeEngine:
         self.finished: dict[int, list[int]] = {}
         self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0}
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else (
+            contextlib.nullcontext())
 
     # ---- host-side bookkeeping ----
 
@@ -204,8 +228,9 @@ class ServeEngine:
                 cross = (encoder_apply(self.params, self.cfg, req.cross_src)
                          if self.cfg.family == "encdec" else req.cross_src)
             last_idx = jnp.asarray([len(req.prompt) - 1], jnp.int32)
-            logits, row = self._prefill(self.params, row, toks, last_idx,
-                                        cross)
+            with self._mesh_ctx():
+                logits, row = self._prefill(self.params, row, toks,
+                                            last_idx, cross)
             # splice the prefilled row caches into the batch at slot i —
             # stacked-period leaves are (n_periods, B, ...): batch axis 1
             self.caches = _splice_slot(self.caches, row, i)
@@ -246,8 +271,9 @@ class ServeEngine:
         if self.active == 0:
             return
         pos = jnp.asarray([s.pos for s in self._slots], jnp.int32)
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           self._last_tok, pos)
+        with self._mesh_ctx():
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               self._last_tok, pos)
         self.stats["decode_steps"] += 1
         self._key, k = jax.random.split(self._key)
         keys = jax.random.split(k, self.n_slots)

@@ -1,0 +1,124 @@
+"""Cross-implementation attention parity matrix (ISSUE 4 satellite).
+
+THE single contract: every attention implementation in the dispatch
+registry — ``naive`` / ``flash`` / ``flash_pallas`` / ``flash_ring``
+(and ``flash_pallas_int`` where dualmode applies) — must agree on
+outputs AND gradients across GQA / MLA-style head dims / ragged
+validity / bf16 / non-divisible shapes.  This matrix supersedes the
+per-file parity checks (test_flash*.py keep their targeted
+regressions; agreement itself is asserted here, once, for all impls).
+
+``flash_ring`` runs over the largest power-of-two device ring dividing
+the case's sequence dims: a size-1 ring in the plain tier-1 run, the
+real 8-wide rotation under the CI multi-device lane
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+from repro.launch.mesh import auto_mesh
+
+RNG_SEED = 23
+
+CASES = {
+    "gqa": dict(b=2, s=64, t=64, k=2, g=3, h=16),
+    "mla_hv": dict(b=1, s=32, t=32, k=4, g=1, h=24, hv=12),
+    "ragged": dict(b=2, s=48, t=96, k=1, g=2, h=8, ragged=True),
+    "noncausal": dict(b=2, s=32, t=64, k=2, g=2, h=16, causal=False),
+    "bf16": dict(b=2, s=48, t=64, k=2, g=2, h=32, dtype="bfloat16"),
+    "non_divisible": dict(b=1, s=17, t=33, k=2, g=2, h=8),
+}
+# the float contract; 'naive' is the oracle the others are pinned against
+FLOAT_IMPLS = ("flash", "flash_pallas", "flash_ring")
+# forward tolerance: f32 reduction-order noise vs bf16 output rounding
+ATOL = {"float32": 1e-5, "bfloat16": 2e-2}
+GRAD_ATOL = {"float32": 2e-5, "bfloat16": 3e-2}
+
+
+@functools.lru_cache(maxsize=None)
+def _case(name):
+    c = dict(CASES[name])
+    rng = np.random.default_rng(RNG_SEED)
+    b, s, t = c["b"], c["s"], c["t"]
+    k, g, h = c["k"], c["g"], c["h"]
+    hv = c.get("hv", h)
+    dtype = jnp.dtype(c.get("dtype", "float32"))
+    q = jnp.asarray(rng.normal(size=(b, s, k, g, h)), dtype)
+    kk = jnp.asarray(rng.normal(size=(b, t, k, h)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, t, k, hv)), dtype)
+    q_pos = jnp.broadcast_to(jnp.arange(t - s, t)[None], (b, s))
+    if c.get("ragged"):
+        kv_valid = jnp.asarray(rng.random((b, t)) > 0.3).at[:, 0].set(True)
+    else:
+        kv_valid = jnp.ones((b, t), bool)
+    return (q, kk, v, q_pos, kv_valid, c.get("causal", True),
+            str(dtype))
+
+
+def _run(impl, q, k, v, q_pos, kv_valid, causal):
+    fn = dispatch.get_attention(impl)
+    call = functools.partial(fn, q_pos=q_pos, kv_valid=kv_valid,
+                             causal=causal, scale=None,
+                             softmax_impl="float", ring_axis="model")
+    if impl != "flash_ring":
+        return call(q, k, v)
+    s, t = q.shape[1], k.shape[1]
+    n = len(jax.devices())
+    while n > 1 and (s % n or t % n):
+        n //= 2
+    with auto_mesh((n,), ("model",)):
+        return call(q, k, v)
+
+
+@pytest.mark.parametrize("impl", FLOAT_IMPLS)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_outputs_match_naive(case, impl):
+    q, k, v, q_pos, kv_valid, causal, dtype = _case(case)
+    want = _run("naive", q, k, v, q_pos, kv_valid, causal)
+    got = _run(impl, q, k, v, q_pos, kv_valid, causal)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=ATOL[dtype])
+
+
+@pytest.mark.parametrize("impl", FLOAT_IMPLS)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_grads_match_naive(case, impl):
+    q, k, v, q_pos, kv_valid, causal, dtype = _case(case)
+
+    def g_of(f):
+        return jax.grad(
+            lambda q_, k_, v_: f(q_, k_, v_).astype(jnp.float32).sum(),
+            argnums=(0, 1, 2))(q, k, v)
+
+    got = g_of(lambda *a: _run(impl, *a, q_pos, kv_valid, causal))
+    want = g_of(lambda *a: _run("naive", *a, q_pos, kv_valid, causal))
+    for name, a, b in zip(("dq", "dk", "dv"), got, want):
+        assert bool(jnp.all(jnp.isfinite(a.astype(jnp.float32)))), name
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=GRAD_ATOL[dtype],
+                                   err_msg=f"{case}/{impl}/{name}")
+
+
+@pytest.mark.parametrize("case", [c for c in sorted(CASES)
+                                  if "dtype" not in CASES[c]])
+def test_dualmode_words_int_kernel_vs_naive(case):
+    """Where dualmode applies (f32 operands), the blocked bit-accurate
+    kernel and the whole-row naive unit produce the same probability
+    words; the output residual is pure prob@v reduction-order noise."""
+    q, k, v, q_pos, kv_valid, causal, _ = _case(case)
+    naive = dispatch.get_attention("naive")(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+        scale=None, softmax_impl="dualmode")
+    got = dispatch.get_attention("flash_pallas_int")(
+        q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+        scale=None, softmax_impl="dualmode")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(naive),
+                               atol=1e-5)

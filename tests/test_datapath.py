@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
 from jax.experimental import pallas as pl
 
 from repro.kernels import datapath as dp
@@ -211,6 +212,94 @@ def test_tiling_blocks_never_degenerate():
     assert tiling.row_block(7, 100) % tiling.SUBLANE == 0
     bm, bf = tiling.matmul_blocks(48, 72)
     assert bm % tiling.SUBLANE == 0 and bf % tiling.LANE == 0
+
+
+# ---------------- (e) online_softmax_merge: the ring monoid ----------------
+# The algebraic fact sequence-parallel ring attention relies on: partial
+# (m, l, acc) states form a commutative monoid under the merge, with the
+# empty-shard sentinel (MASK_VALUE, 0, 0) — the float twin of the int
+# path's PHANTOM_Q — as identity, and the fold is invariant to HOW the
+# key set was split (kernels/ring_attention.py is this fold across
+# devices; models/flash.flash_attention_merged is it on one host).
+
+def _partials(seed: int, n_chunks: int, chunk: int, d: int = 4,
+              spread: float = 4.0):
+    """n_chunks independent (m, l, acc) partial states of one 2-row set."""
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.normal(size=(2, n_chunks * chunk)) * spread,
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, n_chunks * chunk, d)), jnp.float32)
+    parts = [dp.online_softmax_partial(s[:, i * chunk:(i + 1) * chunk],
+                                       v[:, i * chunk:(i + 1) * chunk])
+             for i in range(n_chunks)]
+    return s, v, parts
+
+
+def _finish(part):
+    return np.asarray(dp.online_softmax_finish(part[1], part[2]))
+
+
+@given(st.integers(0, 6), st.integers(1, 8), st.floats(0.5, 8.0))
+@settings(max_examples=24, deadline=None)
+def test_merge_is_associative(seed, chunk, spread):
+    _, _, (a, b, c) = _partials(seed, 3, chunk, spread=spread)
+    left = dp.online_softmax_merge(dp.online_softmax_merge(a, b), c)
+    right = dp.online_softmax_merge(a, dp.online_softmax_merge(b, c))
+    np.testing.assert_allclose(_finish(left), _finish(right), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(left[0]), np.asarray(right[0]))
+
+
+@given(st.integers(0, 6), st.integers(1, 8))
+@settings(max_examples=24, deadline=None)
+def test_merge_is_commutative_bitwise(seed, chunk):
+    """max and IEEE addition are symmetric, so a<->b is EXACT, not just
+    close — the ring may merge hops in any arrival order."""
+    _, _, (a, b) = _partials(seed, 2, chunk)
+    ab = dp.online_softmax_merge(a, b)
+    ba = dp.online_softmax_merge(b, a)
+    for x, y in zip(ab, ba):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.integers(0, 6), st.integers(1, 8), st.booleans())
+@settings(max_examples=24, deadline=None)
+def test_merge_identity_is_empty_shard_sentinel(seed, chunk, left_side):
+    """(MASK_VALUE, 0, 0) — what a fully-phantom shard produces — merges
+    as a bit-exact no-op: every streamed path starts its running max at
+    MASK_VALUE, so real partials never carry a smaller max."""
+    _, _, (a,) = _partials(seed, 1, chunk)
+    ident = (jnp.full_like(a[0], dp.MASK_VALUE), jnp.zeros_like(a[1]),
+             jnp.zeros_like(a[2]))
+    got = (dp.online_softmax_merge(ident, a) if left_side
+           else dp.online_softmax_merge(a, ident))
+    for x, y in zip(got, a):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_all_phantom_block_produces_identity():
+    """online_softmax_partial of an all--inf (tiling-phantom) block IS the
+    sentinel — no NaNs from exp2(-inf + inf)."""
+    s = jnp.full((2, 8), -jnp.inf, jnp.float32)
+    v = jnp.ones((2, 8, 4), jnp.float32)
+    m, l, acc = dp.online_softmax_partial(s, v)
+    assert float(m.min()) == dp.MASK_VALUE
+    np.testing.assert_array_equal(np.asarray(l), 0.0)
+    np.testing.assert_array_equal(np.asarray(acc), 0.0)
+
+
+@given(st.integers(0, 6), st.sampled_from([1, 2, 3, 4, 6, 8, 12, 24]))
+@settings(max_examples=24, deadline=None)
+def test_merge_invariant_to_kv_split_points(seed, n_chunks):
+    """Folding ANY split of the key set reproduces the whole-row softmax
+    combine — the exact invariance ring attention needs when the shard
+    count (mesh size) changes."""
+    chunk = 24 // n_chunks
+    s, v, parts = _partials(seed, n_chunks, chunk)
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = dp.online_softmax_merge(acc, p)
+    want = jnp.einsum("rn,rnd->rd", dp.row_softmax(s), v)
+    np.testing.assert_allclose(_finish(acc), np.asarray(want), atol=1e-6)
 
 
 def test_fit_block_minimizes_padding():

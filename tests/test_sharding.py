@@ -65,6 +65,53 @@ def test_cache_specs_divisible(arch, batch):
         assert any(found)
 
 
+@pytest.mark.parametrize("max_seq", [2048, 2050])
+def test_cache_specs_ring_axis_shards_kv_sequence(max_seq):
+    """ISSUE 4 bugfix regression: with a ring_axis, KV-cache sequence
+    dims shard over that axis (so ring shards place where the rotation
+    expects them) — guarded, so a non-divisible sequence (2050 % 16 != 0)
+    replicates instead of silently padding — and the same axis is never
+    booked twice in one spec (head dims yield to the ring)."""
+    import repro.distributed.sharding as sh
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 16}
+    cfg = registry.get_config("qwen3-14b")
+    batch = 4                                  # divisible: batch-DP active
+    shapes = jax.eval_shape(lambda: init_caches(cfg, batch, max_seq))
+    specs = sh.cache_pspecs(shapes, FakeMesh(), batch, ring_axis="model")
+    _check_tree((2, 16), ("data", "model"), specs, shapes)
+    divisible = max_seq % 16 == 0
+
+    def seq_axes(spec_tree):
+        """(kv-seq-dim axis, spec) per k/v leaf + a double-booking scan."""
+        seqs, booked = [], []
+
+        def visit(path, spec):
+            parts = [p for p in tuple(spec) if p is not None]
+            booked.append(len(parts) != len(set(parts)))
+            names = [str(getattr(e, "key", getattr(e, "idx", "")))
+                     for e in path]
+            if names and names[-1] in ("k", "v"):
+                seq_idx = 2 if "periods" in names else 1
+                seqs.append(spec[seq_idx] if len(spec) > seq_idx else None)
+        jax.tree_util.tree_map_with_path(
+            visit, spec_tree, is_leaf=lambda x: isinstance(x, P))
+        return seqs, booked
+
+    seqs, booked = seq_axes(specs)
+    assert not any(booked)
+    assert seqs and all(
+        (s == "model") == divisible for s in seqs), seqs
+    # without the knob the old behavior is untouched: batch-DP shards,
+    # sequence dims stay unsharded
+    base_seqs, base_booked = seq_axes(sh.cache_pspecs(shapes, FakeMesh(),
+                                                      batch))
+    assert not any(base_booked)
+    assert base_seqs and all(s is None for s in base_seqs)
+
+
 def test_tp_sharded_training_matches_single_device(subproc):
     """Gold test: loss on a (2,4) DP x TP mesh == unsharded loss."""
     code = '''
