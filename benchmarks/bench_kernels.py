@@ -5,6 +5,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -293,14 +294,137 @@ def main_flash_ring(json_path: str | None = None, ring_devices: int = 8
         print(f"# wrote {os.path.abspath(json_path)}")
 
 
+def main_decode(json_path: str | None = None,
+                cache_lens: tuple[int, ...] = (4096, 16384, 65536),
+                splits: tuple[int, ...] = (1, 2, 4, 8),
+                engine_max_seq: int = 2048, engine_requests: int = 6,
+                engine_max_new: int = 8) -> None:
+    """Decode shoot-out: naive s_q=1 attention vs the split-KV
+    flash-decode kernel across cache lengths and split counts, plus
+    engine-level continuous-batching throughput with mixed-length slots.
+
+    Records BENCH_decode.json — the serving-throughput trajectory file:
+    us/token per (cache length, impl, split count), the max
+    |flash_decode - naive| output residual per cache length, and
+    tokens/sec through a reduced ServeEngine whose decode program runs
+    each impl.  Off-TPU the Pallas numbers are interpret mode — a
+    correctness checkpoint, not a speed claim; on TPU the same entries
+    measure the compiled kernel.
+    """
+    from repro.configs import registry
+    from repro.kernels.flash_decode import flash_decode_pallas
+    from repro.models.transformer import init_lm
+    from repro.serve import Request, ServeEngine
+
+    rng = np.random.default_rng(0)
+    b, kh, g, h = 1, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, 1, kh, g, h)), jnp.float32)
+    results = {"shape": {"b": b, "kv_heads": kh, "groups": g, "head_dim": h},
+               "backend": jax.default_backend(),
+               "cache_lens": list(cache_lens), "splits": list(splits),
+               "us_per_token": {"naive": {}, "flash_decode": {}},
+               "parity_max_abs_vs_naive": {}, "engine": {}}
+    for t in cache_lens:
+        kk = jnp.asarray(rng.normal(size=(b, t, kh, h)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, t, kh, h)), jnp.float32)
+        q_pos = jnp.full((b, 1), t - 1, jnp.int32)
+        valid = jnp.ones((b, t), bool)
+        naive = jax.jit(lambda q_, k_, v_, qp=q_pos, va=valid: _naive_sdpa(
+            q_, k_, v_, q_pos=qp, kv_valid=va))
+        out_naive = jax.block_until_ready(naive(q, kk, v))
+        t_naive = time_fn(naive, q, kk, v, iters=5)
+        results["us_per_token"]["naive"][str(t)] = t_naive
+        emit(f"kernels/decode_naive_{t}_us", t_naive,
+             f"backend={jax.default_backend()}")
+        per_split, parity = {}, 0.0
+        for ns in splits:
+            fn = lambda q_, k_, v_, ns_=ns, qp=q_pos, va=valid: \
+                flash_decode_pallas(q_, k_, v_, q_pos=qp, kv_valid=va,
+                                    num_splits=ns_)
+            out = jax.block_until_ready(fn(q, kk, v))
+            parity = max(parity, float(jnp.abs(out - out_naive).max()))
+            t_fd = time_fn(fn, q, kk, v, iters=5)
+            per_split[str(ns)] = t_fd
+            emit(f"kernels/decode_flash_{t}_splits{ns}_us", t_fd,
+                 f"parity_vs_naive={parity:.2e}")
+        results["us_per_token"]["flash_decode"][str(t)] = per_split
+        results["parity_max_abs_vs_naive"][str(t)] = parity
+    assert max(results["parity_max_abs_vs_naive"].values()) <= 1e-5
+
+    # engine-level: continuous batching with MIXED-length slots, decode
+    # program pinned to each impl — tokens/sec over the full run (the
+    # ragged per-slot tile skip is what flash_decode adds here)
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    lens = [2 + 5 * (i % 4) for i in range(engine_requests)]  # 2..17 mixed
+    tps = {}
+    for impl in ("naive", "flash_decode"):
+        eng = ServeEngine(cfg, params, n_slots=4, max_seq=engine_max_seq,
+                          prefill_buckets=(32,), decode_attn_impl=impl)
+        reqs = [Request(rid=i, prompt=list(range(1, n + 1)),
+                        max_new=engine_max_new)
+                for i, n in enumerate(lens)]
+        t0 = time.perf_counter()
+        outs = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(o) for o in outs.values())
+        tps[impl] = toks / dt
+        emit(f"serve/decode_engine_{impl}_tok_s", dt / max(toks, 1) * 1e6,
+             f"{toks} tokens, max_seq={engine_max_seq}")
+    results["engine"] = {"arch": cfg.name, "max_seq": engine_max_seq,
+                         "n_slots": 4, "prompt_lens": lens,
+                         "max_new": engine_max_new, "tokens_per_s": tps}
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+
+
+def check_decode_schema(json_path: str) -> None:
+    """Assert BENCH_decode.json has the shape the trajectory tooling
+    reads: per-cache-length us/token for naive and per-split flash_decode,
+    a parity residual per cache length, and engine tokens/sec for both
+    decode impls.  Lengths/splits themselves may vary (the CI smoke runs
+    a reduced sweep)."""
+    with open(json_path) as fh:
+        d = json.load(fh)
+    for key in ("backend", "cache_lens", "splits", "us_per_token",
+                "parity_max_abs_vs_naive", "engine"):
+        assert key in d, f"BENCH_decode.json missing {key!r}"
+    lens = [str(t) for t in d["cache_lens"]]
+    assert lens, "empty cache_lens"
+    for t in lens:
+        assert t in d["us_per_token"]["naive"]
+        per = d["us_per_token"]["flash_decode"][t]
+        assert per and all(str(ns) in per for ns in d["splits"])
+        assert float(d["parity_max_abs_vs_naive"][t]) <= 1e-5
+    tps = d["engine"]["tokens_per_s"]
+    assert set(tps) == {"naive", "flash_decode"} and all(
+        v > 0 for v in tps.values())
+    print(f"# BENCH_decode schema OK: {json_path}")
+
+
 if __name__ == "__main__":
     if "--ring-only" in sys.argv:
         i = sys.argv.index("--ring-only")
         main_flash_ring(sys.argv[i + 1] if len(sys.argv) > i + 1
                         else "BENCH_flash_ring.json")
         sys.exit(0)
+    if "--decode-only" in sys.argv:
+        i = sys.argv.index("--decode-only")
+        path = (sys.argv[i + 1] if len(sys.argv) > i + 1
+                else "BENCH_decode.json")
+        if "--quick" in sys.argv:   # CI smoke: reduced sweep, same schema
+            main_decode(path, cache_lens=(2048, 4096), splits=(1, 2),
+                        engine_max_seq=1024, engine_requests=3,
+                        engine_max_new=3)
+        else:
+            main_decode(path)
+        check_decode_schema(path)
+        sys.exit(0)
     main()
     main_flash("BENCH_flash.json")
     main_flash_int("BENCH_flash_int.json")
     main_flash_bwd("BENCH_flash_bwd.json")
     main_flash_ring("BENCH_flash_ring.json")
+    main_decode("BENCH_decode.json")

@@ -101,6 +101,8 @@ class ModelConfig:
     # sequence instead of replicating 32k-deep caches per chip.
     ring_axis: str = ""
     # gated-MLP execution: dense | fused_pallas (kernels/fused_ffn.py)
+    # | auto (resolves to fused_pallas on TPU, dense elsewhere — explicit
+    # strings are never rewritten; see kernels/dispatch.resolve_ffn)
     ffn_impl: str = "dense"
     moe_dispatch: str = "sort"      # sort | dense
     # modality stubs (assignment: frontend is a stub, backbone is real)

@@ -192,3 +192,28 @@ def online_softmax_merge(part_a, part_b):
     c_a = jnp.exp2((m_a - m) * LOG2E)
     c_b = jnp.exp2((m_b - m) * LOG2E)
     return m, l_a * c_a + l_b * c_b, acc_a * c_a + acc_b * c_b
+
+
+def online_softmax_merge_n(m, l, acc, axis: int = 0):
+    """Vectorized n-way fold of partial states stacked along ``axis``.
+
+    The split-KV decode path ("flash decoding") produces one partial per
+    KV split; folding them pairwise with :func:`online_softmax_merge`
+    would chain n-1 dependent rescales, while the monoid structure lets
+    the whole fold collapse to ONE max and ONE rescaled sum:
+
+        m*  = max_i m_i
+        l*  = sum_i l_i   * 2**((m_i - m*)·log2e)
+        acc* = sum_i acc_i * 2**((m_i - m*)·log2e)
+
+    ``m``/``l`` broadcast against ``acc`` (the usual layout keeps a
+    trailing singleton dim on the statistics).  Reductions keep ``axis``
+    as a singleton so the fold is shape-stable for the caller.  Sentinel
+    partials ``(MASK_VALUE, 0, 0)`` contribute exact IEEE zeros, so
+    including empty splits is a bit-exact no-op — same identity law as
+    the pairwise merge, checked in tests/test_datapath.py.
+    """
+    m_all = jnp.max(m, axis=axis, keepdims=True)
+    c = jnp.exp2((m - m_all) * LOG2E)
+    return (m_all, jnp.sum(l * c, axis=axis, keepdims=True),
+            jnp.sum(acc * c, axis=axis, keepdims=True))

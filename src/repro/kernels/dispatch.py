@@ -5,9 +5,9 @@ consumers, so model code never switches on strings itself:
 
   softmax    'float' | 'dualmode'            (attention probabilities)
   attention  'auto' | 'naive' | 'flash' | 'flash_pallas'
-             | 'flash_pallas_int' | 'flash_ring'
+             | 'flash_pallas_int' | 'flash_ring' | 'flash_decode'
   activation 'gelu_exact' | ... (delegates to repro.core.activations)
-  ffn        'dense' | 'fused_pallas'        (gated-MLP execution)
+  ffn        'auto' | 'dense' | 'fused_pallas'  (gated-MLP execution)
 
 Providers register themselves at import time (``models/attention.py``
 registers 'naive', ``models/flash.py`` registers 'flash' and the 'auto'
@@ -20,9 +20,16 @@ datapath -> kernels -> dispatch -> models.
 
 Attention resolution is softmax-aware: ``softmax_impl='dualmode'`` can
 never be silently dropped.  'auto' + dualmode routes blocked shapes to
-the bit-accurate Pallas int kernel; an EXPLICIT float blocked impl
-('flash' / 'flash_pallas' / 'flash_ring') + dualmode raises instead of
-quietly running the fp32 datapath.
+the bit-accurate Pallas int kernel (decode rows — s_q=1 — back to
+'naive', the exact whole-row unit); an EXPLICIT float blocked impl
+('flash' / 'flash_pallas' / 'flash_ring' / 'flash_decode') + dualmode
+raises instead of quietly running the fp32 datapath.
+
+Resolution is also shape- and backend-aware through the 'auto' rule
+(registered by ``models/flash.py``): s_q=1 against a long KV cache picks
+the split-KV decode kernel 'flash_decode'; wide-q blocked shapes pick
+the compiled Pallas kernel on TPU and the pure-JAX blocked path on
+interpret backends (where interpret-mode Pallas loses to XLA).
 
 Resolution is also mesh-aware when the caller opts in with a
 ``ring_axis``: when 'auto' would stream a float blocked path AND the
@@ -82,7 +89,8 @@ _ATTENTION_AUTO: list[Callable] = []   # single slot: (s_q, t) -> impl name
 # blocked impls that run the float log-domain datapath by construction —
 # resolution refuses to pair these with softmax_impl='dualmode' (the
 # bit-accurate words come from 'naive' or 'flash_pallas_int')
-FLOAT_BLOCKED_ATTENTION = frozenset({"flash", "flash_pallas", "flash_ring"})
+FLOAT_BLOCKED_ATTENTION = frozenset(
+    {"flash", "flash_pallas", "flash_ring", "flash_decode"})
 
 
 def ambient_mesh():
@@ -136,6 +144,7 @@ def _load_attention_providers() -> None:
     must not depend on having imported ``repro.models`` first."""
     import repro.kernels.flash_attention      # noqa: F401
     import repro.kernels.flash_attention_int  # noqa: F401
+    import repro.kernels.flash_decode         # noqa: F401
     import repro.kernels.ring_attention       # noqa: F401
     import repro.models.attention             # noqa: F401  (naive+flash+rule)
 
@@ -150,7 +159,10 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
 
       * 'auto' + 'dualmode': short rows stay 'naive' (whole-row unit);
         shapes the auto rule would stream go to 'flash_pallas_int'
-        (the unit's blocked three-sweep kernel), never a float path.
+        (the unit's blocked three-sweep kernel), never a float path;
+        s_q=1 decode rows the rule would send to 'flash_decode' fall
+        back to 'naive' — the whole-row unit is exact there and the int
+        kernel's three sweeps buy nothing at one query row.
       * explicit 'flash'/'flash_pallas'/'flash_ring' + 'dualmode':
         ValueError — these run the float datapath by construction, and
         silently dropping the unit is exactly the bug this guard exists
@@ -170,7 +182,12 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
         _load_attention_providers()
     if impl == "auto":
         impl = _ATTENTION_AUTO[0](s_q, t_kv) if _ATTENTION_AUTO else "naive"
-        if softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
+        if softmax_impl == "dualmode" and impl == "flash_decode":
+            # dualmode decode: s_q=1 rows run the whole-row unit exactly
+            # and cheaply — never the float split-KV path, and the int
+            # kernel's three sweeps buy nothing at one query row
+            impl = "naive"
+        elif softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
             impl = "flash_pallas_int"
         elif impl in ("flash", "flash_pallas"):
             n = ring_axis_size(ring_axis)
@@ -213,8 +230,24 @@ def register_ffn(name: str, fn: Callable) -> None:
     _FFN[name] = fn
 
 
+def resolve_ffn(impl: str) -> str:
+    """Resolve ``ffn_impl='auto'`` to a concrete execution strategy.
+
+    'auto' picks 'fused_pallas' on TPU — the compiled fused gated-matmul
+    + activation epilogue — and 'dense' everywhere else, where
+    interpret-mode Pallas loses to the plain XLA graph.  Explicit strings
+    ('dense', 'fused_pallas') pass through untouched, so a config that
+    pins an impl keeps it on every backend.
+    """
+    if impl == "auto":
+        return "fused_pallas" if jax.default_backend() == "tpu" else "dense"
+    return impl
+
+
 def get_ffn(impl: str) -> Callable | None:
     """None means the plain (unfused) path; otherwise a fused GLU kernel."""
+    if impl not in _FFN and impl == "fused_pallas":
+        import repro.kernels.fused_ffn  # noqa: F401  (self-registers)
     try:
         return _FFN[impl]
     except KeyError:

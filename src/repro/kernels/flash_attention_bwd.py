@@ -16,11 +16,20 @@ the softmax-jacobian term into one per-row scalar:
 
     dS = P * (dO V^T - D)        dQ = dS K     dK = dS^T Q     dV = P^T dO
 
+``D`` is FUSED into the kernels instead of running as a separate
+pre-pass: the dq kernel computes it from the (o, dO) tiles on its first
+KV step and carries it in VMEM scratch for the rest of the sweep; the
+dk/dv kernel recomputes it per (q tile) visit — a (bq, hv) elementwise
+row sum, noise next to the tile matmuls — so neither kernel reads a
+third per-row statistic from HBM and no extra XLA pass materializes
+``D`` at all.
+
 Standard two-pass split, one kernel per output side:
 
   * dq:    grid (b, heads, q_tiles, kv_tiles) — stream KV per q tile,
            accumulate dQ in VMEM scratch across the sequential kv dim
-           (``attention_blockspecs``' layout, reused verbatim).
+           (``attention_blockspecs``' layout, reused verbatim); D lives
+           in a second scratch row, computed once at kv step 0.
   * dk/dv: grid (b, kv_heads, kv_tiles, groups, q_tiles) — stream Q per
            kv tile; the G query groups of a KV head and all q tiles
            accumulate into the SAME (bkv, h)/(bkv, hv) scratch, so the
@@ -62,8 +71,16 @@ def _probs_from_stats(m_row, l_row, s):
     return dp.online_softmax_finish(l_row, p)
 
 
+def _rowsum_do_o(do_ref, o_ref):
+    """Dao's per-row scalar D = rowsum(dO ∘ O) from the two output-layout
+    tiles — the fused replacement for the old host-side pre-pass."""
+    do = do_ref[0, :, 0, 0, :].astype(jnp.float32)        # (bq, hv)
+    o = o_ref[0, :, 0, 0, :].astype(jnp.float32)
+    return jnp.sum(do * o, axis=-1, keepdims=True)        # (bq, 1)
+
+
 def _tile_grads(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
-                l_ref, d_ref, kv_tile, *, block_kv: int, causal: bool,
+                l_ref, d_row, kv_tile, *, block_kv: int, causal: bool,
                 t_kv: int):
     """The shared per-tile recompute of both backward kernels.
 
@@ -72,6 +89,8 @@ def _tile_grads(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
     cotangent dS = P * (dO V^T - D), zeroed where the forward's mask
     replaced the score by the constant MASK_VALUE (matching the reference
     ``jnp.where`` VJP, which routes no gradient into the untaken branch).
+    ``d_row`` is the (bq, 1) fused D — from scratch (dq kernel) or
+    recomputed in-tile (dk/dv kernel).
 
     Returns (p, ds, q, kb, do) — everything either kernel body combines.
     """
@@ -84,7 +103,6 @@ def _tile_grads(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
                                  t_kv=t_kv)
     m_row = m_ref[0, 0, 0, :].reshape(-1, 1)              # (bq, 1)
     l_row = l_ref[0, 0, 0, :].reshape(-1, 1)
-    d_row = d_ref[0, 0, 0, :].reshape(-1, 1)
     p = _probs_from_stats(m_row, l_row, s)                # (bq, bkv)
     dpv = jax.lax.dot_general(do, vb, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
@@ -92,19 +110,23 @@ def _tile_grads(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
     return p, ds, q, kb, do
 
 
-def _dq_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
-             l_ref, d_ref, dq_ref, dq_acc, *, block_kv: int, causal: bool,
-             t_kv: int):
+def _dq_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, do_ref,
+             m_ref, l_ref, dq_ref, dq_acc, d_sc, *, block_kv: int,
+             causal: bool, t_kv: int):
     kj = pl.program_id(3)
     hd = q_ref.shape[-1]
 
     @pl.when(kj == 0)
     def _():
         dq_acc[...] = jnp.zeros_like(dq_acc)
+        # fused D: computed once per q tile on the first KV step, carried
+        # in VMEM scratch across the sequential kv dim — no pre-pass
+        d_sc[...] = jnp.broadcast_to(_rowsum_do_o(do_ref, o_ref),
+                                     d_sc.shape)
 
     _, ds, _, kb, _ = _tile_grads(
         qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
-        d_ref, kj, block_kv=block_kv, causal=causal, t_kv=t_kv)
+        d_sc[:, :1], kj, block_kv=block_kv, causal=causal, t_kv=t_kv)
     dq_acc[:, :hd] = dq_acc[:, :hd] + jnp.dot(
         ds, kb, preferred_element_type=jnp.float32)
 
@@ -113,8 +135,8 @@ def _dq_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
         dq_ref[0, :, 0, 0, :] = dq_acc[:, :hd]
 
 
-def _dkdv_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
-               l_ref, d_ref, dk_ref, dv_ref, dk_acc, dv_acc, *,
+def _dkdv_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, do_ref,
+               m_ref, l_ref, dk_ref, dv_ref, dk_acc, dv_acc, *,
                block_kv: int, causal: bool, t_kv: int):
     kv_ = pl.program_id(2)
     g_ = pl.program_id(3)
@@ -129,7 +151,8 @@ def _dkdv_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref,
 
     p, ds, q, _, do = _tile_grads(
         qpos_ref, valid_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
-        d_ref, kv_, block_kv=block_kv, causal=causal, t_kv=t_kv)
+        _rowsum_do_o(do_ref, o_ref), kv_, block_kv=block_kv,
+        causal=causal, t_kv=t_kv)
     dv_acc[:, :hv] = dv_acc[:, :hv] + jax.lax.dot_general(
         p, do, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)               # P^T dO
@@ -158,19 +181,18 @@ def flash_attention_bwd_pallas(q, k, v, o, m, l, do, *, q_pos, kv_valid,
     hv = v.shape[-1]
     bq, bkv = block_q, block_kv
 
-    # Dao et al. recompute trick: the softmax-jacobian row term collapses
-    # to D_i = rowsum(dO_i * O_i) — cheap elementwise, done here once
-    d = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
-    d = jnp.transpose(d, (0, 2, 3, 1))                    # (B, K, G, S)
-
+    # Dao et al.'s D = rowsum(dO∘O) is fused INTO the kernels (dq: first
+    # KV step into scratch; dk/dv: per q-tile visit) — only o/do are
+    # padded here, no per-row D array ever exists in HBM
     qf, qp, kf, vf, valid = tiling.pad_attention_operands(
         q, q_pos, k, v, kv_valid, bq, bkv)
+    of, _ = tiling.pad_dim(o.astype(jnp.float32), 1, bq)
     dof, _ = tiling.pad_dim(do.astype(jnp.float32), 1, bq)
-    # phantom q rows: dO/D pad with 0 and l with 1, so the re-derived
-    # probabilities stay finite and every phantom contribution is 0
+    # phantom q rows: o/dO pad with 0 (so the fused D is 0 there) and l
+    # with 1, so the re-derived probabilities stay finite and every
+    # phantom contribution is 0
     mf, _ = tiling.pad_dim(m, 3, bq)
     lf, _ = tiling.pad_dim(l, 3, bq, value=1.0)
-    df, _ = tiling.pad_dim(d, 3, bq)
     s_p, t_p = qf.shape[1], kf.shape[1]
 
     body = dict(block_kv=bkv, causal=causal, t_kv=t)
@@ -179,15 +201,16 @@ def flash_attention_bwd_pallas(q, k, v, o, m, l, do, *, q_pos, kv_valid,
     dq = pl.pallas_call(
         functools.partial(_dq_body, **body),
         grid=(b, kh * g, s_p // bq, t_p // bkv),
-        in_specs=in_specs + [out_spec, stat, stat, stat],  # + do, m, l, D
+        in_specs=in_specs + [out_spec, out_spec, stat, stat],  # + o, do, m, l
         out_specs=pl.BlockSpec(
             (1, bq, 1, 1, hd),
             lambda b_, h_, qi, kj: (b_, qi, h_ // g, h_ % g, 0)),
         out_shape=jax.ShapeDtypeStruct((b, s_p, kh, g, hd), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((bq, tiling.scratch_lanes(hd)), jnp.float32)],
+            pltpu.VMEM((bq, tiling.scratch_lanes(hd)), jnp.float32),
+            pltpu.VMEM((bq, tiling.scratch_lanes(1)), jnp.float32)],  # D
         interpret=interpret,
-    )(qp, valid, qf, kf, vf, dof, mf, lf, df)
+    )(qp, valid, qf, kf, vf, of, dof, mf, lf)
 
     # dk/dv grid: kv tiles OUTER, (group, q tile) inner — consecutive
     # inner steps revisit the same output block, so the accumulation
@@ -201,10 +224,12 @@ def flash_attention_bwd_pallas(q, k, v, o, m, l, do, *, q_pos, kv_valid,
                      lambda b_, kh_, kv_, g_, qi: (b_, kv_, kh_, 0)),
         pl.BlockSpec((1, bkv, 1, hv),
                      lambda b_, kh_, kv_, g_, qi: (b_, kv_, kh_, 0)),
-        pl.BlockSpec((1, bq, 1, 1, hv),
+        pl.BlockSpec((1, bq, 1, 1, hv),                    # o
+                     lambda b_, kh_, kv_, g_, qi: (b_, qi, kh_, g_, 0)),
+        pl.BlockSpec((1, bq, 1, 1, hv),                    # do
                      lambda b_, kh_, kv_, g_, qi: (b_, qi, kh_, g_, 0)),
     ] + [pl.BlockSpec((1, 1, 1, bq),
-                      lambda b_, kh_, kv_, g_, qi: (b_, kh_, g_, qi))] * 3
+                      lambda b_, kh_, kv_, g_, qi: (b_, kh_, g_, qi))] * 2
     dk, dv = pl.pallas_call(
         functools.partial(_dkdv_body, **body),
         grid=(b, kh, t_p // bkv, g, s_p // bq),
@@ -221,7 +246,7 @@ def flash_attention_bwd_pallas(q, k, v, o, m, l, do, *, q_pos, kv_valid,
             pltpu.VMEM((bkv, tiling.scratch_lanes(hd)), jnp.float32),
             pltpu.VMEM((bkv, tiling.scratch_lanes(hv)), jnp.float32)],
         interpret=interpret,
-    )(qp, valid, qf, kf, vf, dof, mf, lf, df)
+    )(qp, valid, qf, kf, vf, of, dof, mf, lf)
 
     return (tiling.unpad(dq, 1, s_q), tiling.unpad(dk, 1, t),
             tiling.unpad(dv, 1, t))

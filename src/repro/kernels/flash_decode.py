@@ -1,0 +1,211 @@
+"""Split-KV Pallas flash-decode kernel — the s_q=1 serving fast path.
+
+Decode is the shape the blocked flash kernels are worst at: one query row
+per head means the q-tile grid axis degenerates and the whole KV cache is
+streamed by a single sequential sweep.  "Flash decoding" recovers
+parallelism from the only dimension left — the KEYS: the cache is carved
+into ``num_splits`` independent grid cells, each runs the standard
+blocked online-softmax sweep (the same
+:func:`repro.kernels.datapath.online_softmax_update` step every other
+flash flavor runs) into a self-contained partial state ``(m, l, o·l)``,
+and the partials fold with
+:func:`repro.kernels.datapath.online_softmax_merge_n` — the vectorized
+n-way form of the partial-merge monoid the ring uses, so the merged words
+are pinned against ``models/flash.flash_attention_merged`` in tests.
+
+Two decode-specific specializations on top of the generic kernel:
+
+  * The G query groups of a KV head become the score-tile ROWS (the
+    single query row broadcast over groups), so GQA decode still feeds
+    the MXU a (G, block_kv) tile instead of a 1-row sliver.
+  * Ragged continuous batching: each batch row carries its own cache
+    depth via ``q_pos`` (the serving engine's per-slot ``pos`` vector).
+    Causal KV tiles that start beyond a row's position are skipped with
+    ``pl.when`` — a slot at depth 500 in a 64k bucket does ~1 tile of
+    work per split, not the longest slot's full bucket.  Skipped tiles
+    drop only the exp(MASK_VALUE) ~ 1e-13 relative mass of fully-masked
+    keys (the same approximation ring attention's hop skip makes).
+
+Shapes match every other flash flavor, with S pinned to 1:
+
+    q (B, 1, K, G, h)   k (B, T, K, h)   v (B, T, K, hv) -> (B, 1, K, G, hv)
+
+Masking reuses :func:`flash_attention.masked_score_block` — user-invalid
+keys take ``datapath.MASK_VALUE``, tiling phantoms take ``-inf`` — so
+decode can never disagree with the other implementations on which keys
+are "off".  Forward-only: decode never differentiates.  Runs on CPU with
+``interpret=True`` (the default off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import datapath as dp
+from . import dispatch, tiling
+from .flash_attention import masked_score_block
+
+
+def _decode_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, om_ref, ol_ref,
+                 oacc_ref, m_ref, l_ref, acc_ref, *, block_kv: int,
+                 inner: int, causal: bool, t_kv: int):
+    """One (batch, kv-head, split, kv-tile) grid cell.
+
+    The kv-tile axis is innermost, so the (m, l, acc) VMEM scratch streams
+    one split's tiles sequentially; at the split's last tile the UNNORMALIZED
+    partial (m, l, acc = o·l) is written out for the host-side n-way fold.
+    """
+    sp = pl.program_id(2)
+    kj = pl.program_id(3)
+    g = q_ref.shape[-2]
+    hv = oacc_ref.shape[-1]
+    kv_tile = sp * inner + kj
+
+    @pl.when(kj == 0)
+    def _():
+        # empty-split sentinel (MASK_VALUE, 0, 0): splits whose every tile
+        # is skipped/phantom emit the merge identity, not garbage
+        m_ref[...] = jnp.full_like(m_ref, dp.MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def update():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32)       # (G, h) pre-scaled
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)         # (bkv, h)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)         # (bkv, hv)
+        s, _ = masked_score_block(q, kb, qpos_ref, valid_ref, kv_tile,
+                                  block_kv=block_kv, causal=causal,
+                                  t_kv=t_kv)
+        m, l = m_ref[:g, :1], l_ref[:g, :1]                # (G, 1)
+        m_new, l_new, p, corr = dp.online_softmax_update(m, l, s)
+        acc_ref[:g, :hv] = acc_ref[:g, :hv] * corr + jnp.dot(
+            p, vb, preferred_element_type=jnp.float32)
+        m_ref[:g, :1] = m_new
+        l_ref[:g, :1] = l_new
+
+    if causal:
+        # ragged fast path: this row attends to nothing at or beyond its
+        # own position, so tiles starting past q_pos are pure MASK_VALUE /
+        # phantom mass — skip them entirely (per BATCH row: b is a grid dim)
+        pl.when(kv_tile * block_kv <= qpos_ref[0, 0])(update)
+    else:
+        update()
+
+    @pl.when(kj == inner - 1)
+    def _():
+        om_ref[0, 0, 0, :] = m_ref[:g, 0]
+        ol_ref[0, 0, 0, :] = l_ref[:g, 0]
+        oacc_ref[0, 0, 0, :, :] = acc_ref[:g, :hv]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "num_splits", "block_kv", "interpret"))
+def _flash_decode_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
+                      num_splits: int, block_kv: int, interpret: bool):
+    b, s_q, kh, g, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]
+    # fold the traced scale into q (one compile across scales, the same
+    # contract as flash_attention_pallas)
+    qf = q.astype(jnp.float32) * scale
+
+    bkv = block_kv
+    inner = tiling.cdiv(tiling.cdiv(t, bkv), num_splits)
+    t_pad = num_splits * inner * bkv
+    kf, _ = tiling.pad_dim(k, 1, t_pad)
+    vf, _ = tiling.pad_dim(v, 1, t_pad)
+    valid, _ = tiling.pad_dim(kv_valid.astype(jnp.int32), 1, t_pad, value=0)
+    qp = q_pos.astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda b_, h_, sp, kj: (b_, 0)),
+        pl.BlockSpec((1, bkv),
+                     lambda b_, h_, sp, kj: (b_, sp * inner + kj)),
+        pl.BlockSpec((1, 1, 1, g, hd), lambda b_, h_, sp, kj: (b_, 0, h_,
+                                                               0, 0)),
+        pl.BlockSpec((1, bkv, 1, hd),
+                     lambda b_, h_, sp, kj: (b_, sp * inner + kj, h_, 0)),
+        pl.BlockSpec((1, bkv, 1, hv),
+                     lambda b_, h_, sp, kj: (b_, sp * inner + kj, h_, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, g), lambda b_, h_, sp, kj: (b_, sp, h_, 0)),
+        pl.BlockSpec((1, 1, 1, g), lambda b_, h_, sp, kj: (b_, sp, h_, 0)),
+        pl.BlockSpec((1, 1, 1, g, hv),
+                     lambda b_, h_, sp, kj: (b_, sp, h_, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, num_splits, kh, g), jnp.float32),
+        jax.ShapeDtypeStruct((b, num_splits, kh, g), jnp.float32),
+        jax.ShapeDtypeStruct((b, num_splits, kh, g, hv), jnp.float32),
+    ]
+    rows = tiling.round_up(g, tiling.SUBLANE)
+    part_m, part_l, part_acc = pl.pallas_call(
+        functools.partial(_decode_body, block_kv=bkv, inner=inner,
+                          causal=causal, t_kv=t),
+        grid=(b, kh, num_splits, inner),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((rows, tiling.scratch_lanes(1)), jnp.float32),  # m
+            pltpu.VMEM((rows, tiling.scratch_lanes(1)), jnp.float32),  # l
+            pltpu.VMEM((rows, tiling.scratch_lanes(hv)), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, valid, qf, kf, vf)
+
+    # the tree fold: one vectorized n-way merge over the split axis — the
+    # same monoid the ring folds pairwise, so the merged words satisfy the
+    # partial-merge contract (pinned vs flash_attention_merged in tests)
+    _, l, acc = dp.online_softmax_merge_n(
+        part_m[..., None], part_l[..., None], part_acc, axis=1)
+    return dp.online_softmax_finish(l, acc).astype(v.dtype)  # (B,1,K,G,hv)
+
+
+def flash_decode_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
+                        scale: float | None = None,
+                        num_splits: int | None = None,
+                        block_kv: int | None = None,
+                        interpret: bool | None = None):
+    """Split-KV flash decode; see module docstring for shapes/masking.
+
+    ``num_splits=None`` picks the :func:`repro.kernels.tiling.
+    decode_splits` heuristic (cache length / core count, 1 at short
+    caches).  The output is invariant to the split count — WHERE the
+    cache is split only changes which partial each key lands in, and the
+    merge is the associative monoid fold.
+    """
+    if q.shape[1] != 1:
+        raise ValueError(
+            f"flash_decode is the s_q=1 decode kernel; got s_q={q.shape[1]}"
+            " — use 'flash'/'flash_pallas' for wide query tiles")
+    t = k.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
+    if num_splits is None:
+        num_splits = tiling.decode_splits(t)
+    if block_kv is None:
+        block_kv = tiling.decode_kv_block(t, num_splits)
+    return _flash_decode_jit(q, k, v, q_pos, kv_valid, jnp.float32(scale),
+                             causal=causal, num_splits=num_splits,
+                             block_kv=block_kv, interpret=interpret)
+
+
+def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
+                     softmax_impl="float", ring_axis=""):
+    if softmax_impl == "dualmode":
+        raise ValueError(
+            "attn_impl='flash_decode' runs the float log-domain datapath "
+            "and cannot honor softmax_impl='dualmode' — decode rows are "
+            "s_q=1, use 'naive' (the whole-row unit is exact there)")
+    return flash_decode_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                               causal=causal, scale=scale)
+
+
+dispatch.register_attention("flash_decode", _attention_entry)

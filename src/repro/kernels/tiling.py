@@ -103,6 +103,51 @@ def matmul_blocks(m: int, f: int, want_m: int = 128,
     return fit_block(m, SUBLANE, want_m), fit_block(f, LANE, want_f)
 
 
+#   split-KV decode ("flash decoding") policy: decode runs s_q=1, so the
+#   only parallelism left is over the KEYS — the cache is carved into
+#   `num_splits` independent sweeps whose (m, l, o·l) partials merge via
+#   datapath.online_softmax_merge_n.  Splitting only pays once each split
+#   still streams a meaningful stretch of cache, and more splits than
+#   cores just queue.
+DECODE_FLASH_MIN_KV = 1024   # below this the s_q=1 'auto' pick stays naive
+DECODE_SPLIT_KEYS = 2048     # min keys per split before another split pays
+DECODE_MAX_SPLITS = 8        # partial-merge fan-in cap
+
+
+def device_core_count() -> int:
+    """Cores on the primary device (TPU megacore count where exposed),
+    falling back to the host CPU count — the parallelism the split-KV
+    decode grid is trying to fill."""
+    import os
+
+    import jax
+    try:
+        n = getattr(jax.devices()[0], "num_cores", None)
+        if n:
+            return int(n)
+    except Exception:       # pragma: no cover - device probing best-effort
+        pass
+    return os.cpu_count() or DECODE_MAX_SPLITS
+
+
+def decode_splits(t_kv: int, max_splits: int | None = None) -> int:
+    """Split count for the s_q=1 split-KV decode kernel.
+
+    Sized from the cache length (one split per DECODE_SPLIT_KEYS keys)
+    and capped by the core count / DECODE_MAX_SPLITS; degenerates to 1
+    split — plain blocked streaming — at short caches.
+    """
+    if max_splits is None:
+        max_splits = min(DECODE_MAX_SPLITS, device_core_count())
+    return int(max(1, min(max_splits, t_kv // DECODE_SPLIT_KEYS)))
+
+
+def decode_kv_block(t_kv: int, num_splits: int) -> int:
+    """KV tile width for one decode split: LANE-aligned, <= 512 keys, and
+    dividing the minimally padded per-split extent."""
+    return fit_block(cdiv(t_kv, max(num_splits, 1)), LANE, 512)
+
+
 def attention_blocks(s_q: int, t_kv: int) -> tuple[int, int]:
     """(bq, bkv) for blocked attention: q rows x kv keys per grid step.
 

@@ -29,6 +29,15 @@ def main() -> None:
                          "this many local devices (0 = off; off-TPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count accordingly)")
+    ap.add_argument("--prefill-impl", default=None,
+                    help="attention impl for the prefill program "
+                         "(default: resolve cfg.attn_impl per phase)")
+    ap.add_argument("--decode-impl", default=None,
+                    help="attention impl for the decode program — e.g. "
+                         "'flash_decode' to force the split-KV decode "
+                         "kernel at any cache length, 'naive' to pin the "
+                         "whole-row path (default: 'auto' resolution, "
+                         "which picks flash_decode at long --max-seq)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,7 +50,11 @@ def main() -> None:
         mesh = auto_mesh((args.ring_devices,), ("model",))
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
     eng = ServeEngine(cfg, params, n_slots=args.slots,
-                      max_seq=args.max_seq, mesh=mesh, seed=args.seed)
+                      max_seq=args.max_seq, mesh=mesh, seed=args.seed,
+                      prefill_attn_impl=args.prefill_impl,
+                      decode_attn_impl=args.decode_impl)
+    print(f"[serve] attention impls: prefill={eng.prefill_attn_impl} "
+          f"decode={eng.decode_attn_impl}")
     rng = jax.random.PRNGKey(args.seed + 1)
     reqs = []
     for i in range(args.requests):

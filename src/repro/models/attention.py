@@ -16,6 +16,7 @@ from repro.kernels import datapath as dp
 from repro.kernels import dispatch
 from repro.kernels import flash_attention as _pallas_flash      # noqa: F401
 from repro.kernels import flash_attention_int as _pallas_int    # noqa: F401
+from repro.kernels import flash_decode as _pallas_decode        # noqa: F401
 from repro.kernels import ring_attention as _pallas_ring        # noqa: F401
 from . import flash as _flash                                   # noqa: F401
 from .layers import (Params, apply_rope, linear, linear_init, rmsnorm,

@@ -142,6 +142,39 @@ def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:
     return s_q * t > threshold
 
 
+def blocked_impl(backend: str | None = None) -> str:
+    """The 'auto' rule's blocked pick, backend-aware.
+
+    On TPU the compiled Pallas kernel is the fast path; on CPU/interpret
+    backends the Pallas kernel runs the interpreter and loses badly to
+    the pure-JAX blocked graph (BENCH_flash.json: 207ms interpret-mode
+    Pallas vs 81ms flash_jax at the same shape), so 'auto' prefers
+    'flash' there.  Explicit impl strings are never rewritten — this
+    only shapes the 'auto' resolution.
+    """
+    backend = backend or jax.default_backend()
+    return "flash_pallas" if backend == "tpu" else "flash"
+
+
+def _auto_rule(s_q: int, t: int) -> str:
+    """impl='auto': naive for short rows, blocked when the score tensor
+    would blow VMEM, and the split-KV decode kernel for the generative-
+    inference shape — one query row against a long KV cache.
+
+    The decode pick is MESH-GATED: flash_decode is a single-device
+    kernel, and a pallas_call has no partitioning rule — lowered under
+    an ambient mesh that shards the KV cache (launch/sharding
+    cache_pspecs over a ring axis, the 512-device dry-run cells) it
+    would gather every slot's full cache per chip, which is exactly the
+    per-chip HBM blowup the dry-run fit check guards.  Sharded decode
+    stays on the shardable whole-row naive graph until a shard_map'd
+    decode kernel exists (ROADMAP: paged KV follow-up)."""
+    if (s_q == 1 and t >= tiling.DECODE_FLASH_MIN_KV
+            and dispatch.ambient_mesh() is None):
+        return "flash_decode"
+    return blocked_impl() if use_flash(s_q, t) else "naive"
+
+
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float", ring_axis=""):
     if softmax_impl == "dualmode":
@@ -153,5 +186,4 @@ def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
 
 
 dispatch.register_attention("flash", _attention_entry)
-dispatch.set_attention_auto_rule(
-    lambda s_q, t: "flash" if use_flash(s_q, t) else "naive")
+dispatch.set_attention_auto_rule(_auto_rule)

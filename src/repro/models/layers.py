@@ -140,8 +140,9 @@ def mlp(p: Params, x, activation: str = "silu", impl: str = "dense"):
     ``impl`` resolves through the kernel registry: 'dense' is the plain
     XLA graph; 'fused_pallas' runs the bias-free gated pair through the
     fused matmul+epilogue kernel (kernels/fused_ffn.py) when the
-    activation is one the fused epilogue computes exactly."""
-    fused = dispatch.get_ffn(impl)
+    activation is one the fused epilogue computes exactly; 'auto' picks
+    'fused_pallas' on TPU and 'dense' elsewhere (dispatch.resolve_ffn)."""
+    fused = dispatch.get_ffn(dispatch.resolve_ffn(impl))
     mode = _FUSABLE_ACT.get(activation)
     if (fused is not None and mode is not None and "gate" in p
             and "b" not in p["gate"] and "b" not in p["up"]):

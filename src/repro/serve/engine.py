@@ -15,11 +15,19 @@ batched cache tree at the slot index, sample, retire on EOS/max_tokens.
 lowers for the decode/prefill shape cells.
 
 Attention impls are selected PER PHASE through the kernel dispatch
-registry: prefill runs wide q tiles (the blocked/flash paths pay off),
-decode runs s_q=1 rows (whole-row naive keeps the dual-mode unit exact
-and cheap).  Each phase's impl is resolved once at engine construction at
-the phase's representative shape, so the two compiled programs pin their
-own kernels instead of both trailing the model default.
+registry: prefill runs wide q tiles (the blocked/flash paths pay off);
+decode runs s_q=1 rows against the full cache bucket — at long `max_seq`
+the 'auto' rule resolves the split-KV flash-decode kernel
+(``kernels/flash_decode.py``), which parallelizes over the KEYS and,
+because the batched decode step feeds it the per-slot cache depths (the
+vector ``pos`` becomes the ragged ``kv_valid`` mask and each row's
+``q_pos``), skips cache tiles beyond each slot's own depth — lockstep
+continuous batching stops paying for the longest slot's full bucket on
+every row.  Short caches stay on whole-row 'naive' (which also keeps the
+dual-mode unit exact).  Each phase's impl is resolved once at engine
+construction at the phase's representative shape, so the two compiled
+programs pin their own kernels instead of both trailing the model
+default.
 """
 from __future__ import annotations
 
@@ -59,8 +67,12 @@ def make_decode_step(cfg: ModelConfig, act_pspec=None):
     """(params, caches, tokens(B,1), pos(B,)) -> (logits(B,V), caches).
 
     `pos` is the current depth of every slot (vector => slots advance
-    independently).  Cross-attention KV (VLM/enc-dec) is read from the
-    cache written at prefill time.
+    independently).  Inside the model the vector becomes each row's
+    ragged `kv_valid` mask and `q_pos` — which is exactly what the
+    split-KV flash-decode kernel keys its per-row tile skip on, so a
+    shallow slot does not pay for the deepest slot's cache sweep.
+    Cross-attention KV (VLM/enc-dec) is read from the cache written at
+    prefill time.
     """
     def decode(params, caches, tokens, pos):
         logits, caches, _ = lm_apply(params, cfg, tokens, pos=pos,
@@ -143,11 +155,14 @@ class ServeEngine:
         self.caches = init_caches(cfg, n_slots, max_seq, dtype)
         # per-phase attention impls, resolved once through the dispatch
         # registry at each phase's representative shape (prefill: widest
-        # q tile vs the full cache; decode: one q row vs the full cache).
-        # None defers to cfg.attn_impl, so a config that pins a concrete
-        # impl keeps it for both phases; resolution is softmax-aware, so
-        # a dualmode config routes to the bit-accurate paths instead of
-        # silently running the float ones.
+        # q tile vs the full cache; decode: one q row vs the full cache —
+        # long max_seq resolves 'auto' to the split-KV flash_decode
+        # kernel, short caches to whole-row naive).  None defers to
+        # cfg.attn_impl, so a config that pins a concrete impl keeps it
+        # for both phases; resolution is softmax-aware, so a dualmode
+        # config routes to the bit-accurate paths instead of silently
+        # running the float ones (dualmode decode stays naive: the unit
+        # is whole-row exact at s_q=1).
         prefill_sq = max_seq if self._exact_prefill else self.buckets[-1]
         with self._mesh_ctx():
             # the compiled prefill runs at EVERY bucket, so the ring is

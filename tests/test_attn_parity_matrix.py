@@ -2,9 +2,10 @@
 
 THE single contract: every attention implementation in the dispatch
 registry — ``naive`` / ``flash`` / ``flash_pallas`` / ``flash_ring``
-(and ``flash_pallas_int`` where dualmode applies) — must agree on
-outputs AND gradients across GQA / MLA-style head dims / ragged
-validity / bf16 / non-divisible shapes.  This matrix supersedes the
+(and ``flash_pallas_int`` where dualmode applies, ``flash_decode`` at
+its s_q=1 decode rows) — must agree on outputs AND gradients across
+GQA / MLA-style head dims / ragged validity / bf16 / non-divisible
+shapes.  This matrix supersedes the
 per-file parity checks (test_flash*.py keep their targeted
 regressions; agreement itself is asserted here, once, for all impls).
 
@@ -105,6 +106,65 @@ def test_grads_match_naive(case, impl):
                                    np.asarray(b, np.float32),
                                    atol=GRAD_ATOL[dtype],
                                    err_msg=f"{case}/{impl}/{name}")
+
+
+# ---------------- flash_decode: the s_q=1 split-KV rows ----------------
+# Decode attends one query row against the whole cache, so the matrix
+# cases are re-run at s_q=1 (the LAST query row of each case, keeping its
+# position/validity/causality) across split counts.  The split-count
+# invariance — output independent of WHERE the cache was split — is the
+# partial-merge contract, pinned here against both the naive oracle and
+# the one-host fold home flash_attention_merged.
+
+DECODE_SPLITS = (1, 2, 4, 8)
+
+
+def _decode_case(name):
+    q, k, v, q_pos, kv_valid, causal, dtype = _case(name)
+    return q[:, -1:], k, v, q_pos[:, -1:], kv_valid, causal, dtype
+
+
+def _run_decode(q, k, v, q_pos, kv_valid, causal, n_splits):
+    from repro.kernels.flash_decode import flash_decode_pallas
+    return flash_decode_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                               causal=causal, num_splits=n_splits)
+
+
+@pytest.mark.parametrize("n_splits", DECODE_SPLITS)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_flash_decode_outputs_match_naive(case, n_splits):
+    q, k, v, q_pos, kv_valid, causal, dtype = _decode_case(case)
+    want = _run("naive", q, k, v, q_pos, kv_valid, causal)
+    got = _run_decode(q, k, v, q_pos, kv_valid, causal, n_splits)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=ATOL[dtype])
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_flash_decode_split_count_invariance(case):
+    """The fold is invariant to the split count: every n_splits produces
+    the same words (to f32 sum-order noise), and where the cache length
+    divides, the kernel's split partials merge to exactly what the
+    one-host oracle fold (models/flash.flash_attention_merged) merges."""
+    from repro.models.flash import flash_attention_merged
+    q, k, v, q_pos, kv_valid, causal, dtype = _decode_case(case)
+    ref = _run_decode(q, k, v, q_pos, kv_valid, causal, 1)
+    for n_splits in DECODE_SPLITS[1:]:
+        got = _run_decode(q, k, v, q_pos, kv_valid, causal, n_splits)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=ATOL[dtype],
+                                   err_msg=f"n_splits={n_splits}")
+        if k.shape[1] % n_splits == 0:
+            merged = flash_attention_merged(
+                q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+                n_splits=n_splits)
+            np.testing.assert_allclose(np.asarray(got, np.float32),
+                                       np.asarray(merged, np.float32),
+                                       atol=ATOL[dtype],
+                                       err_msg=f"merged n_splits={n_splits}")
 
 
 @pytest.mark.parametrize("case", [c for c in sorted(CASES)

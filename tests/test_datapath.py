@@ -302,6 +302,52 @@ def test_merge_invariant_to_kv_split_points(seed, n_chunks):
     np.testing.assert_allclose(_finish(acc), np.asarray(want), atol=1e-6)
 
 
+@given(st.integers(0, 6), st.sampled_from([1, 2, 3, 4, 6, 8]))
+@settings(max_examples=24, deadline=None)
+def test_merge_n_matches_pairwise_fold(seed, n_chunks):
+    """The vectorized n-way fold (the split-KV decode combine) computes
+    the same finished output as folding the partials pairwise with
+    online_softmax_merge — same monoid, one max + one rescaled sum."""
+    chunk = 24 // n_chunks
+    s, v, parts = _partials(seed, n_chunks, chunk)
+    pair = parts[0]
+    for p in parts[1:]:
+        pair = dp.online_softmax_merge(pair, p)
+    m = jnp.stack([p[0] for p in parts], 0)
+    l = jnp.stack([p[1] for p in parts], 0)
+    acc = jnp.stack([p[2] for p in parts], 0)
+    m_n, l_n, acc_n = dp.online_softmax_merge_n(m, l, acc, axis=0)
+    # the max is order-independent: exact
+    np.testing.assert_array_equal(np.asarray(m_n[0]), np.asarray(pair[0]))
+    np.testing.assert_allclose(_finish((m_n[0], l_n[0], acc_n[0])),
+                               _finish(pair), atol=1e-6)
+    np.testing.assert_allclose(_finish((m_n[0], l_n[0], acc_n[0])),
+                               np.asarray(jnp.einsum(
+                                   "rn,rnd->rd", dp.row_softmax(s), v)),
+                               atol=1e-6)
+
+
+@given(st.integers(0, 6), st.integers(1, 4))
+@settings(max_examples=24, deadline=None)
+def test_merge_n_sentinel_splits_are_bit_exact_noops(seed, n_sentinels):
+    """Empty splits (every key skipped/phantom) contribute exact IEEE
+    zeros to the n-way fold — padding the split axis with sentinels
+    changes no bits, which is why the decode kernel may run more splits
+    than the cache has tiles."""
+    _, _, parts = _partials(seed, 2, 8)
+    m = jnp.stack([p[0] for p in parts], 0)
+    l = jnp.stack([p[1] for p in parts], 0)
+    acc = jnp.stack([p[2] for p in parts], 0)
+    want = dp.online_softmax_merge_n(m, l, acc, axis=0)
+    sent_m = jnp.full((n_sentinels,) + parts[0][0].shape, dp.MASK_VALUE)
+    pad = lambda x, s: jnp.concatenate([x, s], 0)
+    got = dp.online_softmax_merge_n(
+        pad(m, sent_m), pad(l, jnp.zeros_like(sent_m)),
+        pad(acc, jnp.zeros((n_sentinels,) + parts[0][2].shape)), axis=0)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_fit_block_minimizes_padding():
     """Block choice never inflates padding beyond hardware alignment:
     513 cols pad to 640 with 128-wide blocks, not to 1024 with a blind

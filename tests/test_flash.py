@@ -73,7 +73,7 @@ def test_flash_bf16_io():
 
 
 def test_use_flash_threshold():
-    assert not use_flash(1, 32768)          # decode: naive
+    assert not use_flash(1, 32768)          # decode: split-KV/naive path
     assert use_flash(4096, 4096)            # train_4k: blocked
     assert use_flash(32768, 32768)          # prefill_32k: blocked
     assert not use_flash(64, 64)
@@ -81,6 +81,30 @@ def test_use_flash_threshold():
     # non-512-multiple contexts must NOT fall back to materialized scores
     assert use_flash(4096, 4097)
     assert use_flash(32768, 33000)
+
+
+def test_auto_blocked_pick_is_backend_aware(monkeypatch):
+    """'auto' streams through the compiled Pallas kernel on TPU and the
+    pure-JAX blocked path on interpret backends (BENCH_flash.json:
+    interpret-mode Pallas ~2.5x slower than flash_jax at the same
+    shape).  Explicit impl strings are never rewritten."""
+    from repro.kernels import dispatch
+    from repro.models.flash import blocked_impl
+    assert blocked_impl("tpu") == "flash_pallas"
+    assert blocked_impl("cpu") == "flash"
+    assert blocked_impl("gpu") == "flash"
+    # this host (CPU/interpret): resolution unchanged from the seed rule
+    assert dispatch.resolve_attention("auto", 4096, 4096) == "flash"
+    assert dispatch.resolve_attention("auto", 64, 64) == "naive"
+    # simulated TPU: blocked picks go to the compiled kernel; everything
+    # else about resolution — naive short rows, dualmode routing, the
+    # explicit-impl passthrough — is unchanged
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert dispatch.resolve_attention("auto", 4096, 4096) == "flash_pallas"
+    assert dispatch.resolve_attention("auto", 64, 64) == "naive"
+    assert dispatch.resolve_attention(
+        "auto", 4096, 4096, softmax_impl="dualmode") == "flash_pallas_int"
+    assert dispatch.resolve_attention("flash", 4096, 4096) == "flash"
 
 
 def test_flash_grad_finite():

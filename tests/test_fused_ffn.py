@@ -60,6 +60,31 @@ def test_mlp_fused_impl_exact_for_non_fusable_activation():
                                    atol=1e-5)
 
 
+def test_ffn_auto_resolves_by_backend(monkeypatch):
+    """ffn_impl='auto' (ROADMAP open item): fused_pallas on TPU, dense
+    elsewhere — explicit strings pass through untouched on any backend."""
+    from repro.kernels import dispatch
+    assert dispatch.resolve_ffn("auto") == "dense"        # this CPU host
+    assert dispatch.resolve_ffn("dense") == "dense"
+    assert dispatch.resolve_ffn("fused_pallas") == "fused_pallas"
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert dispatch.resolve_ffn("auto") == "fused_pallas"
+    assert dispatch.resolve_ffn("dense") == "dense"
+    assert dispatch.resolve_ffn("fused_pallas") == "fused_pallas"
+    with pytest.raises(ValueError, match="unknown ffn impl"):
+        dispatch.get_ffn("no_such_impl")
+
+
+def test_mlp_auto_is_dense_off_tpu():
+    """On this host 'auto' IS the dense path — bit-identical output."""
+    from repro.models.layers import mlp, mlp_init
+    x = jnp.asarray(RNG.normal(size=(2, 6, 32)), jnp.float32)
+    p = mlp_init(jax.random.PRNGKey(1), 32, 64, jnp.float32, gated=True)
+    np.testing.assert_array_equal(np.asarray(mlp(p, x, "silu", impl="auto")),
+                                  np.asarray(mlp(p, x, "silu",
+                                                 impl="dense")))
+
+
 def test_fused_glu_grad_matches_unfused_reference():
     """Custom VJP (backward via the unfused reference graph) — the train
     path with ffn_impl='fused_pallas' depends on this differentiating."""
