@@ -74,7 +74,8 @@ def main_flash(json_path: str | None = None) -> None:
     }
     results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
                          "head_dim": h},
-               "backend": jax.default_backend(), "us_per_call": {}}
+               "backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu", "us_per_call": {}}
     for name, fn in impls.items():
         t = time_fn(fn, q, kk, v)
         results["us_per_call"][name] = t
@@ -116,7 +117,8 @@ def main_flash_int(json_path: str | None = None) -> None:
     }
     results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
                          "head_dim": h},
-               "backend": jax.default_backend(), "us_per_call": {}}
+               "backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu", "us_per_call": {}}
     outs = {}
     for name, fn in impls.items():
         outs[name] = jax.block_until_ready(fn(q, kk, v))  # warm + capture
@@ -172,7 +174,8 @@ def main_flash_bwd(json_path: str | None = None) -> None:
     }
     results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
                          "head_dim": h},
-               "backend": jax.default_backend(), "us_per_call": {}}
+               "backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu", "us_per_call": {}}
     grads = {}
     for name, fn in impls.items():
         grads[name] = jax.block_until_ready(fn(q, kk, v))  # warm + capture
@@ -266,6 +269,7 @@ def main_flash_ring(json_path: str | None = None, ring_devices: int = 8
     results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
                          "head_dim": h},
                "backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu",
                "n_devices": len(jax.devices()),
                "us_per_call": {"flash_pallas_1dev": t_single},
                "tokens_per_s": {"flash_pallas_1dev": b * s / t_single * 1e6},
@@ -321,6 +325,7 @@ def main_decode(json_path: str | None = None,
     q = jnp.asarray(rng.normal(size=(b, 1, kh, g, h)), jnp.float32)
     results = {"shape": {"b": b, "kv_heads": kh, "groups": g, "head_dim": h},
                "backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu",
                "cache_lens": list(cache_lens), "splits": list(splits),
                "us_per_token": {"naive": {}, "flash_decode": {}},
                "parity_max_abs_vs_naive": {}, "engine": {}}
@@ -404,11 +409,156 @@ def check_decode_schema(json_path: str) -> None:
     print(f"# BENCH_decode schema OK: {json_path}")
 
 
+
+def _run_engine_traced(eng, reqs):
+    """Drive the engine step-by-step, tracking concurrency high-water and
+    decode progress on the steps where a prefill chunk also ran."""
+    for r in reqs:
+        eng.submit(r)
+    conc_hwm = 0
+    prefill_steps_with_decoders = 0
+    decode_ticks_during_prefill = 0
+    t0 = time.perf_counter()
+    steps = 0
+    while eng.pending() and steps < 10_000:
+        chunks0 = eng.stats["prefill_chunks"]
+        decodes0 = eng.stats["decode_steps"]
+        had_decoders = any(sl.decoding for sl in eng._slots)
+        eng.step()
+        steps += 1
+        conc_hwm = max(conc_hwm, eng.active)
+        if eng.stats["prefill_chunks"] > chunks0 and had_decoders:
+            prefill_steps_with_decoders += 1
+            decode_ticks_during_prefill += (eng.stats["decode_steps"]
+                                            - decodes0)
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in eng.finished.values())
+    return {"tokens": toks, "wall_s": dt,
+            "tokens_per_s": toks / dt,
+            "concurrent_hwm": conc_hwm,
+            "decode_ticks_per_prefill_step":
+                (decode_ticks_during_prefill / prefill_steps_with_decoders
+                 if prefill_steps_with_decoders else None)}
+
+
+def main_serve(json_path: str | None = None, *, n_requests: int = 12,
+               n_slots: int = 4, max_seq: int = 256,
+               max_new: int = 8, prefill_chunk: int = 32) -> None:
+    """Serving shoot-out: paged block-table KV cache vs the slotted
+    contiguous layout AT EQUAL HBM (the paged pool holds exactly the
+    contiguous cache's token capacity, but gets 2x the scheduler slots —
+    worst-case-reach admission is what lets it use them).
+
+    Records BENCH_serve.json: tokens/s per cache mode, the paged pool's
+    blocks-in-use high-water, mean admission latency, cache-tree copies
+    per admission (paged must be ZERO — that is the tentpole claim),
+    concurrency high-water at equal HBM, and decode ticks per
+    chunked-prefill step (1.0 = decode never stalled behind a prompt).
+    Off-TPU everything here is interpret/CPU timing — a scheduling and
+    correctness checkpoint, not a speed claim.
+    """
+    from repro.configs import registry
+    from repro.models.transformer import init_lm
+    from repro.serve import Request, ServeEngine
+
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    def mk_reqs():
+        reqs = []
+        shared = list(range(100, 124))                # 24-token base
+        for i in range(n_requests):
+            if i % 3 == 2:       # every third request extends the shared
+                prompt = shared + [int(x) for x in
+                                   rng.integers(1, 200, size=i % 5 + 1)]
+            else:
+                plen = int(rng.integers(4, 28))
+                prompt = [int(x) for x in rng.integers(1, 200, size=plen)]
+            reqs.append(Request(rid=i, prompt=prompt, max_new=max_new))
+        return reqs
+
+    results = {"backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu",
+               "arch": cfg.name,
+               "workload": {"n_requests": n_requests, "max_new": max_new,
+                            "max_seq": max_seq,
+                            "prefill_chunk": prefill_chunk},
+               "equal_hbm_tokens": n_slots * max_seq, "modes": {}}
+    for mode in ("contiguous", "paged"):
+        kw = dict(cache_mode=mode, max_seq=max_seq, seed=0)
+        if mode == "paged":
+            # 2x slots, same token budget: the pool is sized to the
+            # contiguous cache (n_slots rows of max_seq tokens)
+            bs = __import__("repro.kernels.tiling",
+                            fromlist=["x"]).paged_block_size(max_seq)
+            kw.update(n_slots=2 * n_slots, prefill_chunk=prefill_chunk,
+                      num_blocks=n_slots * (max_seq // bs) + 1)
+        else:
+            kw.update(n_slots=n_slots, prefill_buckets=(32, max_seq))
+        eng = ServeEngine(cfg, params, **kw)
+        run = _run_engine_traced(eng, mk_reqs())
+        st = eng.stats
+        run.update({
+            "cache_copies": st["cache_copies"],
+            "admit_latency_us_mean":
+                st["admit_time_s"] / max(st["admitted"], 1) * 1e6,
+            "prefill_chunks": st["prefill_chunks"],
+            "shared_blocks": st["shared_blocks"],
+            "blocks_hwm": (eng.pool.hwm if eng.pool is not None else None),
+            "n_slots": kw["n_slots"]})
+        results["modes"][mode] = run
+        emit(f"serve/{mode}_tok_s", run["wall_s"] / max(run["tokens"], 1)
+             * 1e6, f"{run['tokens']} tokens, conc_hwm="
+             f"{run['concurrent_hwm']}, copies={run['cache_copies']}")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+
+
+def check_serve_schema(json_path: str) -> None:
+    """Assert BENCH_serve.json carries the tentpole claims: zero cache
+    copies on paged admission, strictly more concurrent slots than
+    contiguous at equal HBM, and decode not stalling during chunked
+    prefill (>= 1 decode tick per prefill-chunk step)."""
+    with open(json_path) as fh:
+        d = json.load(fh)
+    for key in ("backend", "interpret", "equal_hbm_tokens", "modes"):
+        assert key in d, f"BENCH_serve.json missing {key!r}"
+    assert set(d["modes"]) == {"paged", "contiguous"}
+    paged, contig = d["modes"]["paged"], d["modes"]["contiguous"]
+    for m in (paged, contig):
+        assert m["tokens"] > 0 and m["tokens_per_s"] > 0
+    assert paged["tokens"] == contig["tokens"], "workloads diverged"
+    assert paged["cache_copies"] == 0, "paged admission copied a cache"
+    assert contig["cache_copies"] > 0
+    assert paged["concurrent_hwm"] > contig["concurrent_hwm"], \
+        "paged did not out-batch contiguous at equal HBM"
+    assert paged["blocks_hwm"] is not None and paged["blocks_hwm"] > 0
+    assert paged["shared_blocks"] > 0, "workload never shared a prefix"
+    dpp = paged["decode_ticks_per_prefill_step"]
+    assert dpp is not None and dpp >= 1.0, \
+        f"decode stalled during chunked prefill ({dpp})"
+    print(f"# BENCH_serve schema OK: {json_path}")
+
+
 if __name__ == "__main__":
     if "--ring-only" in sys.argv:
         i = sys.argv.index("--ring-only")
         main_flash_ring(sys.argv[i + 1] if len(sys.argv) > i + 1
                         else "BENCH_flash_ring.json")
+        sys.exit(0)
+    if "--serve-only" in sys.argv:
+        i = sys.argv.index("--serve-only")
+        path = (sys.argv[i + 1] if len(sys.argv) > i + 1
+                else "BENCH_serve.json")
+        if "--quick" in sys.argv:   # CI smoke: fewer requests, same schema
+            main_serve(path, n_requests=8, n_slots=2, max_seq=128,
+                       max_new=4, prefill_chunk=16)
+        else:
+            main_serve(path)
+        check_serve_schema(path)
         sys.exit(0)
     if "--decode-only" in sys.argv:
         i = sys.argv.index("--decode-only")
@@ -428,3 +578,4 @@ if __name__ == "__main__":
     main_flash_bwd("BENCH_flash_bwd.json")
     main_flash_ring("BENCH_flash_ring.json")
     main_decode("BENCH_decode.json")
+    main_serve("BENCH_serve.json")

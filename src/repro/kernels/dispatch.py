@@ -219,6 +219,41 @@ def get_attention(impl: str) -> Callable:
 
 
 # --------------------------------------------------------------------------
+# paged attention (block-table KV gather variants)
+# --------------------------------------------------------------------------
+
+# Parallel registry for implementations that read K/V through a block
+# pool + per-request block table instead of contiguous (B, T, ...) rows.
+# Keyed by the SAME names as _ATTENTION: resolution stays the dense
+# resolve_attention above (paged changes the memory layout, not the
+# numerics contract), and the model layer asks get_paged_attention for
+# the resolved name — falling back to a dense gather when the impl has
+# no native block-table mode.
+
+_PAGED_ATTENTION: dict[str, Callable] = {}
+
+
+def register_paged_attention(name: str, fn: Callable) -> None:
+    """fn(q, k_pool, v_pool, *, block_tables, q_pos, kv_valid, causal,
+    scale, softmax_impl, ring_axis) -> (B,1,K,G,hv).
+
+    ``k_pool``/``v_pool`` are (N_blocks, block_size, K, h) pools;
+    ``block_tables`` is a (B, max_blocks) int32 map from each row's
+    logical block index to its pool block (sentinel block 0 for entries
+    past the row's length).  Everything after the layout — masking,
+    causality, the partial-merge fold — matches the dense contract."""
+    _PAGED_ATTENTION[name] = fn
+
+
+def get_paged_attention(name: str) -> Callable | None:
+    """The block-table native variant of ``name``, or None when the impl
+    only speaks contiguous rows (caller gathers dense and dispatches)."""
+    if name not in _PAGED_ATTENTION:
+        _load_attention_providers()
+    return _PAGED_ATTENTION.get(name)
+
+
+# --------------------------------------------------------------------------
 # FFN (gated-MLP execution strategy)
 # --------------------------------------------------------------------------
 

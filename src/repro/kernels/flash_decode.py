@@ -167,6 +167,125 @@ def _flash_decode_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
     return dp.online_softmax_finish(l, acc).astype(v.dtype)  # (B,1,K,G,hv)
 
 
+def _paged_decode_body(tab_ref, *refs, **kw):
+    """Block-table wrapper: the scalar-prefetched table ref arrives first
+    and is consumed entirely by the BlockSpec index maps — the body
+    proper is the SAME online-softmax sweep as contiguous decode (the
+    physical gather happens in the pipeline, not the arithmetic)."""
+    del tab_ref
+    _decode_body(*refs, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "num_splits", "interpret"))
+def _flash_decode_paged_jit(q, k_pool, v_pool, tables, q_pos, kv_valid,
+                            scale, *, causal: bool, num_splits: int,
+                            interpret: bool):
+    b, s_q, kh, g, hd = q.shape
+    bs = k_pool.shape[1]                 # block size == KV tile width
+    hv = v_pool.shape[-1]
+    nblk = tables.shape[1]
+    t = nblk * bs                        # logical cache extent per row
+    qf = q.astype(jnp.float32) * scale
+
+    inner = tiling.cdiv(nblk, num_splits)
+    # pad the table out to the grid (surplus tiles alias sentinel block 0
+    # and are masked off as phantoms by the t_kv check / kv_valid pad)
+    tab, _ = tiling.pad_dim(tables.astype(jnp.int32), 1,
+                            num_splits * inner, value=0)
+    valid, _ = tiling.pad_dim(kv_valid.astype(jnp.int32), 1,
+                              num_splits * inner * bs, value=0)
+    qp = q_pos.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, num_splits, inner),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, sp, kj, tab_: (b_, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp * inner + kj)),
+            pl.BlockSpec((1, 1, 1, g, hd),
+                         lambda b_, h_, sp, kj, tab_: (b_, 0, h_, 0, 0)),
+            # THE paged difference: the KV tile index routes through the
+            # scalar-prefetched block table instead of a contiguous stride
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, h_, sp, kj, tab_:
+                         (tab_[b_, sp * inner + kj], 0, h_, 0)),
+            pl.BlockSpec((1, bs, 1, hv),
+                         lambda b_, h_, sp, kj, tab_:
+                         (tab_[b_, sp * inner + kj], 0, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp, h_, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp, h_, 0)),
+            pl.BlockSpec((1, 1, 1, g, hv),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp, h_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tiling.round_up(g, tiling.SUBLANE),
+                        tiling.scratch_lanes(1)), jnp.float32),   # m
+            pltpu.VMEM((tiling.round_up(g, tiling.SUBLANE),
+                        tiling.scratch_lanes(1)), jnp.float32),   # l
+            pltpu.VMEM((tiling.round_up(g, tiling.SUBLANE),
+                        tiling.scratch_lanes(hv)), jnp.float32),  # acc
+        ],
+    )
+    part_m, part_l, part_acc = pl.pallas_call(
+        functools.partial(_paged_decode_body, block_kv=bs, inner=inner,
+                          causal=causal, t_kv=t),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, num_splits, kh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, num_splits, kh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, num_splits, kh, g, hv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tab, qp, valid, qf, k_pool, v_pool)
+
+    _, l, acc = dp.online_softmax_merge_n(
+        part_m[..., None], part_l[..., None], part_acc, axis=1)
+    return dp.online_softmax_finish(l, acc).astype(v_pool.dtype)
+
+
+def flash_decode_paged(q, k_pool, v_pool, *, block_tables, q_pos, kv_valid,
+                       causal: bool = True, scale: float | None = None,
+                       num_splits: int | None = None,
+                       interpret: bool | None = None):
+    """Block-table flash decode: KV gathered through a paged pool.
+
+    ``k_pool``/``v_pool`` are (N_blocks, block_size, K, h|hv) pools and
+    ``block_tables`` is (B, max_blocks) int32 mapping each row's logical
+    block index to its pool block (sentinel 0 past the row's length; the
+    sentinel's mass is masked to exp(MASK_VALUE) by ``kv_valid`` exactly
+    like any dense invalid key).  The KV tile width IS the block size, one
+    table entry per grid step via scalar prefetch, and everything after
+    the gather — masking, the per-row causal tile skip, the
+    ``online_softmax_merge_n`` fold — is byte-for-byte the contiguous
+    kernel's code path, so the split/parity contracts carry over.
+    """
+    if q.shape[1] != 1:
+        raise ValueError(
+            f"flash_decode is the s_q=1 decode kernel; got s_q={q.shape[1]}"
+            " — use 'flash'/'flash_pallas' for wide query tiles")
+    nblk, bs = block_tables.shape[1], k_pool.shape[1]
+    if kv_valid.shape[1] != nblk * bs:
+        raise ValueError(
+            f"kv_valid covers {kv_valid.shape[1]} keys but the table maps "
+            f"{nblk} blocks x {bs} = {nblk * bs}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
+    if num_splits is None:
+        num_splits = min(tiling.decode_splits(nblk * bs), nblk)
+    num_splits = max(1, min(num_splits, nblk))
+    return _flash_decode_paged_jit(q, k_pool, v_pool, block_tables, q_pos,
+                                   kv_valid, jnp.float32(scale),
+                                   causal=causal, num_splits=num_splits,
+                                   interpret=interpret)
+
+
 def flash_decode_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
                         scale: float | None = None,
                         num_splits: int | None = None,
@@ -208,4 +327,18 @@ def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                                causal=causal, scale=scale)
 
 
+def _paged_attention_entry(q, k_pool, v_pool, *, block_tables, q_pos,
+                           kv_valid, causal, scale, softmax_impl="float",
+                           ring_axis=""):
+    if softmax_impl == "dualmode":
+        raise ValueError(
+            "attn_impl='flash_decode' runs the float log-domain datapath "
+            "and cannot honor softmax_impl='dualmode' — decode rows are "
+            "s_q=1, use 'naive' (the whole-row unit is exact there)")
+    return flash_decode_paged(q, k_pool, v_pool, block_tables=block_tables,
+                              q_pos=q_pos, kv_valid=kv_valid, causal=causal,
+                              scale=scale)
+
+
 dispatch.register_attention("flash_decode", _attention_entry)
+dispatch.register_paged_attention("flash_decode", _paged_attention_entry)

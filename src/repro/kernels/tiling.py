@@ -114,20 +114,49 @@ DECODE_SPLIT_KEYS = 2048     # min keys per split before another split pays
 DECODE_MAX_SPLITS = 8        # partial-merge fan-in cap
 
 
-def device_core_count() -> int:
-    """Cores on the primary device (TPU megacore count where exposed),
-    falling back to the host CPU count — the parallelism the split-KV
-    decode grid is trying to fill."""
-    import os
+# TPU generations that expose one TensorCore per chip (no megacore) —
+# the device_kind fallback when the runtime doesn't report ``num_cores``.
+_SINGLE_CORE_TPU_KINDS = ("lite", "v5e", "v6e")
 
+_CORE_COUNT_CACHE: dict[tuple[str, str], int] = {}
+
+
+def device_core_count() -> int:
+    """Cores on the primary device — the parallelism the split-KV decode
+    grid is trying to fill.
+
+    Derived from the actual JAX backend, not the host: on TPU the
+    per-chip TensorCore count (``num_cores`` where the runtime exposes
+    it, else inferred from the device kind — single-core for the
+    inference generations, megacore pair otherwise); on CPU/interpret
+    backends a fixed DECODE_MAX_SPLITS rather than ``os.cpu_count()``,
+    which over-split on TPU hosts (decode splits sized from a 96-way
+    host) and under-split in throttled CI containers.  The lookup is
+    cached per (platform, device_kind) — it runs inside the decode-step
+    build path."""
     import jax
     try:
-        n = getattr(jax.devices()[0], "num_cores", None)
+        dev = jax.devices()[0]
+        key = (dev.platform, str(getattr(dev, "device_kind", "")))
+    except Exception:       # pragma: no cover - device probing best-effort
+        return DECODE_MAX_SPLITS
+    if key not in _CORE_COUNT_CACHE:
+        _CORE_COUNT_CACHE[key] = _probe_core_count(dev, key)
+    return _CORE_COUNT_CACHE[key]
+
+
+def _probe_core_count(dev, key: tuple[str, str]) -> int:
+    platform, kind = key
+    if platform == "tpu":
+        n = getattr(dev, "num_cores", None)
         if n:
             return int(n)
-    except Exception:       # pragma: no cover - device probing best-effort
-        pass
-    return os.cpu_count() or DECODE_MAX_SPLITS
+        kind_l = kind.lower()
+        return 1 if any(s in kind_l for s in _SINGLE_CORE_TPU_KINDS) else 2
+    # CPU / GPU-interpret: the decode grid is emulated; a fixed cap keeps
+    # split counts deterministic across hosts instead of tracking
+    # whatever cpu_count the CI container happens to advertise.
+    return DECODE_MAX_SPLITS
 
 
 def decode_splits(t_kv: int, max_splits: int | None = None) -> int:
@@ -146,6 +175,27 @@ def decode_kv_block(t_kv: int, num_splits: int) -> int:
     """KV tile width for one decode split: LANE-aligned, <= 512 keys, and
     dividing the minimally padded per-split extent."""
     return fit_block(cdiv(t_kv, max(num_splits, 1)), LANE, 512)
+
+
+#   paged-KV policy: the serve engine's block pool carves the cache into
+#   fixed-size blocks addressed through per-request block tables.  The
+#   block size is the paged decode kernel's KV tile width — one grid step
+#   gathers exactly one block via the scalar-prefetched table — so it
+#   must be SUBLANE-aligned (it lands on the second-to-last cache axis)
+#   and small enough that short prompts don't strand most of a block.
+PAGED_MIN_BLOCK = SUBLANE     # floor: sublane alignment of the seq axis
+PAGED_MAX_BLOCK = LANE        # cap: one lane-width tile per grid step
+
+
+def paged_block_size(max_seq: int) -> int:
+    """Tokens per paged-KV block for an engine bounded by ``max_seq``.
+
+    Targets ~16 blocks per maximal sequence (enough table entries for
+    prefix sharing to find full-block boundaries, few enough that the
+    scalar-prefetch table stays tiny), clamped to the hardware alignment
+    window [SUBLANE, LANE]."""
+    want = round_up(cdiv(max_seq, 16), SUBLANE)
+    return int(max(PAGED_MIN_BLOCK, min(PAGED_MAX_BLOCK, want)))
 
 
 def attention_blocks(s_q: int, t_kv: int) -> tuple[int, int]:

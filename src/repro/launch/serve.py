@@ -38,6 +38,23 @@ def main() -> None:
                          "kernel at any cache length, 'naive' to pin the "
                          "whole-row path (default: 'auto' resolution, "
                          "which picks flash_decode at long --max-seq)")
+    ap.add_argument("--cache-mode", default="auto",
+                    choices=("auto", "paged", "contiguous"),
+                    help="KV cache layout: 'paged' = block-table pool "
+                         "with prefix sharing + chunked prefill, "
+                         "'contiguous' = per-slot rows with bucketed "
+                         "prefill, 'auto' = paged wherever the arch "
+                         "supports it")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged KV block size in tokens (0 = the tiling "
+                         "policy's pick for --max-seq)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged pool size in blocks incl. sentinel "
+                         "(0 = match the contiguous HBM budget: "
+                         "slots*max_blocks + 1)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged prefill chunk length in tokens "
+                         "(0 = default 64)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -52,9 +69,17 @@ def main() -> None:
     eng = ServeEngine(cfg, params, n_slots=args.slots,
                       max_seq=args.max_seq, mesh=mesh, seed=args.seed,
                       prefill_attn_impl=args.prefill_impl,
-                      decode_attn_impl=args.decode_impl)
-    print(f"[serve] attention impls: prefill={eng.prefill_attn_impl} "
-          f"decode={eng.decode_attn_impl}")
+                      decode_attn_impl=args.decode_impl,
+                      cache_mode=args.cache_mode,
+                      block_size=args.block_size or None,
+                      num_blocks=args.num_blocks or None,
+                      prefill_chunk=args.prefill_chunk or None)
+    mode = eng.cache_mode
+    if mode == "paged":
+        mode += (f" (block={eng.block_size} pool={eng.num_blocks} "
+                 f"chunk={eng.prefill_chunk})")
+    print(f"[serve] cache={mode} attention impls: "
+          f"prefill={eng.prefill_attn_impl} decode={eng.decode_attn_impl}")
     rng = jax.random.PRNGKey(args.seed + 1)
     reqs = []
     for i in range(args.requests):

@@ -135,6 +135,48 @@ def flash_attention_merged(q, k, v, *, q_pos, kv_valid, n_splits: int,
     return dp.online_softmax_finish(l, acc).astype(v.dtype)
 
 
+def flash_attention_paged_ref(q, k_pool, v_pool, *, block_tables, q_pos,
+                              kv_valid, causal: bool = True,
+                              scale: float | None = None):
+    """Paged fold oracle: one python loop over LOGICAL blocks, each block
+    gathered from the pool through the table, scored+masked exactly like
+    the dense paths, reduced to its ``(m, l, o·l)`` partial with
+    :func:`repro.kernels.datapath.online_softmax_partial` and folded with
+    :func:`repro.kernels.datapath.online_softmax_merge`.
+
+    This is the block-table twin of :func:`flash_attention_merged` — the
+    pure-JAX home of the paged kernel's contract: the Pallas block-table
+    gather must produce the same words as this fold, and the fold itself
+    is split-invariant (one block per partial is the finest split).  The
+    table's physical permutation must be invisible: only the LOGICAL
+    block index enters the mask arithmetic.
+    """
+    b, s_q = q.shape[:2]
+    nblk, bs = block_tables.shape[1], k_pool.shape[1]
+    scale = (1.0 / q.shape[-1] ** 0.5) if scale is None else scale
+    qf = q.astype(jnp.float32) * scale
+
+    part = None
+    for j in range(nblk):
+        kb = k_pool[block_tables[:, j]].astype(jnp.float32)  # (B,bs,K,h)
+        vb = v_pool[block_tables[:, j]].astype(jnp.float32)  # (B,bs,K,hv)
+        s = jnp.einsum("bskgh,btkh->bskgt", qf, kb,
+                       preferred_element_type=jnp.float32)
+        kv_pos = j * bs + jnp.arange(bs)
+        mask = kv_valid[:, j * bs:(j + 1) * bs][:, None, None, None, :]
+        if causal:
+            mask = mask & (kv_pos[None, None, None, None, :]
+                           <= q_pos[:, :, None, None, None])
+        s = jnp.where(mask, s, dp.MASK_VALUE)
+        # (B,bs,K,hv) -> (B,1,K,1,bs,hv): broadcast over S and G
+        part_j = dp.online_softmax_partial(
+            s, jnp.moveaxis(vb, 1, 2)[:, None, :, None])
+        part = part_j if part is None else dp.online_softmax_merge(
+            part, part_j)
+    _, l, acc = part
+    return dp.online_softmax_finish(l, acc).astype(v_pool.dtype)
+
+
 def use_flash(s_q: int, t: int, threshold: int = 1 << 22) -> bool:
     """Blocked path when the scores tensor would exceed ~16 MB f32/head.
 

@@ -131,6 +131,10 @@ class Ctx(NamedTuple):
     pin_sp: Any = None        # callable | None: (dp, 'model', None)
     pin_full: Any = None      # callable | None: (dp, None, None)
     moe_axes: Any = None      # (dp_axis, ep_axis) for MoE dispatch pins
+    # paged KV: (B, max_blocks) int32 block tables, or None (contiguous).
+    # When set, attention caches are (N, bs, ...) pools shared across
+    # requests and writes/reads route through the table (serve engine).
+    paged: Any = None
 
 
 def _pin(ctx: Ctx, x, kind: str):
@@ -150,7 +154,7 @@ def block_apply(p: Params, cfg: ModelConfig, spec: LayerSpec, x, cache,
         o, kv = gqa_apply(p["mixer"], attn_spec(cfg), h,
                           positions=ctx.positions,
                           cache=cache.get("kv") if ctx.cached else None,
-                          pos=ctx.pos)
+                          pos=ctx.pos, paged=ctx.paged)
         if ctx.cached:
             new_cache["kv"] = kv
         x = x + o
@@ -158,7 +162,7 @@ def block_apply(p: Params, cfg: ModelConfig, spec: LayerSpec, x, cache,
         o, kv = mla_apply(p["mixer"], mla_spec(cfg), h,
                           positions=ctx.positions,
                           cache=cache.get("kv") if ctx.cached else None,
-                          pos=ctx.pos)
+                          pos=ctx.pos, paged=ctx.paged)
         if ctx.cached:
             new_cache["kv"] = kv
         x = x + o
@@ -267,6 +271,64 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
     return caches
 
 
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Whether every cached layer of ``cfg`` can live in a paged pool.
+
+    Paged KV covers the attention caches (GQA rows, MLA latents); mixers
+    whose state is NOT a per-position sequence (mamba conv/ssm state,
+    rwkv time-mix state) and cross-attention context caches have nothing
+    to page — those architectures stay on the contiguous engine."""
+    specs = tuple(cfg.prefix) + tuple(cfg.pattern)
+    return (not cfg.enc_layers and
+            all(s.mixer in ("attn", "mla", "none") and not s.cross
+                for s in specs))
+
+
+def _block_paged_cache_init(cfg: ModelConfig, spec: LayerSpec,
+                            num_blocks: int, block_size: int,
+                            dtype) -> Params:
+    c: Params = {}
+    if spec.mixer == "attn":
+        s = attn_spec(cfg)
+        shape = (num_blocks, block_size, s.n_kv_heads, s.head_dim)
+        c["kv"] = {"k": jnp.zeros(shape, dtype),
+                   "v": jnp.zeros(shape, dtype)}
+    elif spec.mixer == "mla":
+        m = mla_spec(cfg)
+        c["kv"] = {"ckv": jnp.zeros((num_blocks, block_size,
+                                     m.kv_lora_rank), dtype),
+                   "krope": jnp.zeros((num_blocks, block_size, m.rope_dim),
+                                      dtype)}
+    elif spec.mixer != "none" or spec.cross:
+        raise ValueError(f"mixer {spec.mixer!r} has no paged cache form")
+    return c
+
+
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      dtype=jnp.float32) -> Params:
+    """Paged twin of :func:`init_caches`: per-layer (N, bs, ...) pools.
+
+    Every layer gets its own pool but all layers share ONE block table
+    per request (allocation is in lockstep across the stack), so the
+    serve engine threads a single (B, max_blocks) table through
+    ``lm_apply(..., paged=tables)``.  Block 0 of every pool is the write
+    sentinel — the allocator never hands it out."""
+    if not paged_supported(cfg):
+        raise ValueError(
+            "paged KV requires attention-only cached layers (no "
+            "mamba/rwkv state, no cross-attention, no encoder)")
+    caches: Params = {}
+    if cfg.prefix:
+        caches["prefix"] = [
+            _block_paged_cache_init(cfg, s, num_blocks, block_size, dtype)
+            for s in cfg.prefix]
+    one = [_block_paged_cache_init(cfg, s, num_blocks, block_size, dtype)
+           for s in cfg.pattern]
+    caches["periods"] = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), one)
+    return caches
+
+
 def encoder_apply(params: Params, cfg: ModelConfig, frames):
     """Whisper-style encoder over stub frame embeddings (B, T, d)."""
     _, norm = make_norm(cfg.norm)
@@ -299,7 +361,7 @@ def lm_apply(params: Params, cfg: ModelConfig, tokens, *, pos=0,
              caches: Params | None = None, cross_src=None,
              remat: bool = False, last_pos=None, act_pspec=None,
              return_hidden: bool = False, inner_pins: bool = False,
-             remat_mode: str = "period"):
+             remat_mode: str = "period", paged=None):
     """tokens (B,S) -> (logits, new_caches, aux).
 
     caches=None  : train mode (full forward, no state threading)
@@ -316,6 +378,10 @@ def lm_apply(params: Params, cfg: ModelConfig, tokens, *, pos=0,
                    GSPMD all-gathers only transiently inside blocks
     return_hidden: skip the LM head, return final-norm hidden states (the
                    chunked-CE loss applies the head itself)
+    paged        : optional (B, max_blocks) int32 block tables — caches
+                   are :func:`init_paged_caches` pools and attention
+                   writes/reads route through the tables (serve engine's
+                   zero-copy admission path)
     """
     _, norm = make_norm(cfg.norm)
     b, sl = tokens.shape
@@ -348,7 +414,7 @@ def lm_apply(params: Params, cfg: ModelConfig, tokens, *, pos=0,
                         and act_pspec[1] else "model")
     ctx = Ctx(positions=positions, pos=pos, cross_src=cross_src,
               cached=cached, pin_sp=pin_sp, pin_full=pin_full,
-              moe_axes=moe_axes)
+              moe_axes=moe_axes, paged=paged)
     pin = ((lambda h: jax.lax.with_sharding_constraint(h, act_pspec))
            if act_pspec is not None else (lambda h: h))
     x = pin(x)

@@ -1,2 +1,4 @@
-from .engine import (Request, ServeEngine, make_decode_step,
+from .engine import (Request, ServeEngine, make_chunk_prefill_step,
+                     make_decode_step, make_paged_decode_step,
                      make_prefill_step)
+from .paged_cache import BlockPool, chain_hashes

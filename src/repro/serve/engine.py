@@ -1,46 +1,56 @@
-"""Batched serving engine: continuous batching over a slotted KV cache.
+"""Batched serving engine: continuous batching over a paged (or slotted
+contiguous) KV cache.
 
-Two compiled programs serve every request mix (vLLM-style separation):
+Two cache modes, same host scheduler skeleton:
 
-  prefill(params, row_caches, tokens(1,L))        one request's prompt ->
-      its caches at batch=1 (bucketed prompt lengths bound compile count)
-  decode(params, caches, tokens(B,1), pos(B,))    ONE token for EVERY slot
-      in lockstep; per-slot depths via vector `pos` (per-row cache writes
-      + per-row causal masks in models/attention.py)
+``paged`` (the default wherever the architecture supports it) — the
+vLLM-style layout: per-layer (N, block_size, ...) block pools shared by
+every request, one (B, max_blocks) int32 block table, and a host-side
+:class:`repro.serve.paged_cache.BlockPool` doing admission/retire as
+pure block alloc/free.  Three properties fall out:
 
-The engine then does classic continuous batching on the host: admit a
-queued request whenever a slot frees, splice its prefilled caches into the
-batched cache tree at the slot index, sample, retire on EOS/max_tokens.
-`make_prefill_step`/`make_decode_step` are also what the multi-pod dry-run
-lowers for the decode/prefill shape cells.
+  * zero-copy admission: a request is admitted by writing integers into
+    its table row — no cache-tree splice, no row copy (``_splice_slot``
+    only survives on the contiguous path, and ``stats['cache_copies']``
+    counts it);
+  * prefix-cache sharing: full prompt blocks are chain-hashed and
+    ref-counted, so a request whose prompt extends an already-prefilled
+    prefix starts decoding from the shared blocks without recomputing
+    (or re-storing) them;
+  * chunked prefill: prompts are consumed ``prefill_chunk`` tokens per
+    engine step, interleaved with the decode tick, so a long prompt
+    never stalls decode traffic.  Compiled-program count stays bounded:
+    ONE chunk shape (1, C) + ONE decode shape (B, 1).
+
+``contiguous`` — the seed layout: per-slot (n_slots, max_seq, ...) rows,
+bucketed whole-prompt prefill at batch 1, caches spliced per admission.
+State-carrying mixers (mamba/rwkv), cross-attention caches and encoders
+have nothing to page and stay here; ``cache_mode='auto'`` picks per
+architecture.
 
 Attention impls are selected PER PHASE through the kernel dispatch
-registry: prefill runs wide q tiles (the blocked/flash paths pay off);
-decode runs s_q=1 rows against the full cache bucket — at long `max_seq`
-the 'auto' rule resolves the split-KV flash-decode kernel
-(``kernels/flash_decode.py``), which parallelizes over the KEYS and,
-because the batched decode step feeds it the per-slot cache depths (the
-vector ``pos`` becomes the ragged ``kv_valid`` mask and each row's
-``q_pos``), skips cache tiles beyond each slot's own depth — lockstep
-continuous batching stops paying for the longest slot's full bucket on
-every row.  Short caches stay on whole-row 'naive' (which also keeps the
-dual-mode unit exact).  Each phase's impl is resolved once at engine
-construction at the phase's representative shape, so the two compiled
-programs pin their own kernels instead of both trailing the model
-default.
+registry exactly as before; on the paged path the resolved decode impl
+additionally picks up its block-table native variant from
+``dispatch.get_paged_attention`` (flash_decode's scalar-prefetch gather)
+inside the model, while impls without one read through a dense gather.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, Callable
+import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels import dispatch
-from repro.models.transformer import encoder_apply, init_caches, lm_apply
+from repro.kernels import dispatch, tiling
+from repro.models.transformer import (encoder_apply, init_caches,
+                                      init_paged_caches, lm_apply,
+                                      paged_supported)
+from .paged_cache import BlockPool, chain_hashes
 
 Params = Any
 
@@ -81,10 +91,43 @@ def make_decode_step(cfg: ModelConfig, act_pspec=None):
     return decode
 
 
+def make_chunk_prefill_step(cfg: ModelConfig, act_pspec=None):
+    """(params, caches, tokens(1,C), pos, tables(1,max_blocks),
+    last_idx(1,)) -> (logits(1,V), caches) — ONE prompt chunk written
+    through the slot's block table at traced offset ``pos``.
+
+    One compiled shape serves every chunk of every prompt: position is a
+    traced scalar, the table a traced operand.  ``last_idx`` picks the
+    logits row (the chunk's last REAL token) — only the final chunk's
+    logits are consumed, the others are (1, V) throwaways."""
+    def prefill_chunk(params, caches, tokens, pos, tables, last_idx):
+        logits, caches, _ = lm_apply(params, cfg, tokens, pos=pos,
+                                     caches=caches, last_pos=last_idx,
+                                     act_pspec=act_pspec, paged=tables)
+        return logits[:, -1, :], caches
+    return prefill_chunk
+
+
+def make_paged_decode_step(cfg: ModelConfig, act_pspec=None):
+    """(params, caches, tokens(B,1), pos(B,), tables(B,max_blocks)) ->
+    (logits(B,V), caches) — the lockstep decode tick reading/writing
+    K/V through per-slot block tables.  Rows that must not write (free
+    slots, slots mid-prefill) are handed all-sentinel table rows, so
+    their scatter lands in block 0 and touches nothing live."""
+    def decode(params, caches, tokens, pos, tables):
+        logits, caches, _ = lm_apply(params, cfg, tokens, pos=pos,
+                                     caches=caches, act_pspec=act_pspec,
+                                     paged=tables)
+        return logits[:, -1, :], caches
+    return decode
+
+
 def _splice_slot(full_tree, row_tree, slot: int):
     """Write batch=1 cache `row_tree` into slot index `slot` of the batched
-    cache.  The batch axis is 1 for stacked-period leaves ('periods' in the
-    path carries a leading n_periods dim), else 0."""
+    cache (CONTIGUOUS mode only — the paged path admits by table writes
+    and never copies cache trees).  The batch axis is 1 for
+    stacked-period leaves ('periods' in the path carries a leading
+    n_periods dim), else 0."""
     def write(path, full, one):
         names = [str(getattr(e, "key", getattr(e, "idx", ""))) for e in path]
         axis = 1 if "periods" in names else 0
@@ -120,10 +163,21 @@ class _Slot:
     remaining: int = 0
     out: list = dataclasses.field(default_factory=list)
     temperature: float = 0.0
+    # paged-mode fields: while `prompt` is set the slot is mid-prefill
+    # (`filled` tokens written so far); `blocks` are the table entries
+    # this slot holds references on (shared prefix + private).
+    prompt: list | None = None
+    filled: int = 0
+    blocks: list = dataclasses.field(default_factory=list)
+    seq: int = 0                     # admission order (FCFS prefill)
 
     @property
     def free(self) -> bool:
         return self.rid < 0
+
+    @property
+    def decoding(self) -> bool:
+        return self.rid >= 0 and self.prompt is None
 
 
 class ServeEngine:
@@ -133,7 +187,11 @@ class ServeEngine:
                  prefill_buckets: tuple[int, ...] = (32, 128, 512),
                  prefill_attn_impl: str | None = None,
                  decode_attn_impl: str | None = None,
-                 mesh=None, seed: int = 0):
+                 mesh=None, seed: int = 0,
+                 cache_mode: str = "auto",
+                 block_size: int | None = None,
+                 num_blocks: int | None = None,
+                 prefill_chunk: int | None = None):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.eos_id = eos_id
@@ -144,6 +202,22 @@ class ServeEngine:
         # path (decode stays s_q=1 -> naive) and the flash_ring provider
         # finds the same mesh ambient at trace time
         self.mesh = mesh
+        if cache_mode not in ("auto", "paged", "contiguous"):
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        if cache_mode == "paged":
+            if not paged_supported(cfg):
+                raise ValueError(
+                    "cache_mode='paged' requires attention-only cached "
+                    "layers (no mamba/rwkv state, cross-attention, or "
+                    "encoder) — use 'auto' or 'contiguous'")
+            if mesh is not None:
+                raise ValueError(
+                    "cache_mode='paged' does not compose with a device "
+                    "mesh yet (pools are unsharded) — ROADMAP item 4")
+        self.cache_mode = ("paged" if cache_mode == "paged" or
+                           (cache_mode == "auto" and paged_supported(cfg)
+                            and mesh is None)
+                           else "contiguous")
         self.buckets = tuple(b for b in sorted(prefill_buckets)
                              if b <= max_seq) or (max_seq,)
         # state-carrying mixers (mamba/rwkv) integrate every input token —
@@ -152,7 +226,23 @@ class ServeEngine:
         self._exact_prefill = any(
             s.mixer in ("mamba", "rwkv")
             for s in tuple(cfg.pattern) + tuple(cfg.prefix))
-        self.caches = init_caches(cfg, n_slots, max_seq, dtype)
+
+        if self.cache_mode == "paged":
+            self.block_size = block_size or tiling.paged_block_size(max_seq)
+            self.max_blocks = tiling.cdiv(max_seq, self.block_size)
+            # default pool = the contiguous HBM budget (+1 sentinel): at
+            # EQUAL memory, admission only reserves what a request can
+            # actually reach (prompt+max_new), so more requests fit
+            self.num_blocks = num_blocks or (n_slots * self.max_blocks + 1)
+            self.prefill_chunk = min(prefill_chunk or 64, max_seq)
+            self.pool = BlockPool(self.num_blocks, self.block_size)
+            self.caches = init_paged_caches(cfg, self.num_blocks,
+                                            self.block_size, dtype)
+            self._tables = np.zeros((n_slots, self.max_blocks), np.int32)
+        else:
+            self.pool = None
+            self.caches = init_caches(cfg, n_slots, max_seq, dtype)
+
         # per-phase attention impls, resolved once through the dispatch
         # registry at each phase's representative shape (prefill: widest
         # q tile vs the full cache; decode: one q row vs the full cache —
@@ -163,7 +253,12 @@ class ServeEngine:
         # config routes to the bit-accurate paths instead of silently
         # running the float ones (dualmode decode stays naive: the unit
         # is whole-row exact at s_q=1).
-        prefill_sq = max_seq if self._exact_prefill else self.buckets[-1]
+        if self.cache_mode == "paged":
+            prefill_sq = self.prefill_chunk
+            t_kv = self.max_blocks * self.block_size
+        else:
+            prefill_sq = max_seq if self._exact_prefill else self.buckets[-1]
+            t_kv = max_seq
         with self._mesh_ctx():
             # the compiled prefill runs at EVERY bucket, so the ring is
             # only offered to 'auto' when each bucket (and the cache
@@ -173,26 +268,37 @@ class ServeEngine:
             # (mamba/rwkv hybrids) sees arbitrary prompt lengths and
             # never rings; decode is s_q=1 and can't either.
             n = dispatch.ring_axis_size(cfg.ring_axis)
-            ring_ok = (not self._exact_prefill and n > 1
+            ring_ok = (self.cache_mode == "contiguous"
+                       and not self._exact_prefill and n > 1
                        and max_seq % n == 0
                        and all(b % n == 0 for b in self.buckets))
             self.prefill_attn_impl = dispatch.resolve_attention(
-                prefill_attn_impl or cfg.attn_impl, prefill_sq, max_seq,
+                prefill_attn_impl or cfg.attn_impl, prefill_sq, t_kv,
                 softmax_impl=cfg.softmax_impl,
                 ring_axis=cfg.ring_axis if ring_ok else "")
             self.decode_attn_impl = dispatch.resolve_attention(
-                decode_attn_impl or cfg.attn_impl, 1, max_seq,
+                decode_attn_impl or cfg.attn_impl, 1, t_kv,
                 softmax_impl=cfg.softmax_impl)
-        self._prefill = jax.jit(make_prefill_step(
-            cfg.replace(attn_impl=self.prefill_attn_impl)))
-        self._decode = jax.jit(make_decode_step(
-            cfg.replace(attn_impl=self.decode_attn_impl)))
+        if self.cache_mode == "paged":
+            self._prefill = jax.jit(make_chunk_prefill_step(
+                cfg.replace(attn_impl=self.prefill_attn_impl)))
+            self._decode = jax.jit(make_paged_decode_step(
+                cfg.replace(attn_impl=self.decode_attn_impl)))
+        else:
+            self._prefill = jax.jit(make_prefill_step(
+                cfg.replace(attn_impl=self.prefill_attn_impl)))
+            self._decode = jax.jit(make_decode_step(
+                cfg.replace(attn_impl=self.decode_attn_impl)))
         self._slots = [_Slot() for _ in range(n_slots)]
+        self._admit_seq = 0
         self._queue: list[Request] = []
         self._key = jax.random.PRNGKey(seed)
         self.finished: dict[int, list[int]] = {}
         self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
-        self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0}
+        self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
+                      "prefill_chunks": 0, "cache_copies": 0,
+                      "shared_blocks": 0, "blocks_hwm": 0,
+                      "admit_time_s": 0.0}
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else (
@@ -205,7 +311,17 @@ class ServeEngine:
         # of being popped mid-run (both prefill flavors: the bucketed path
         # AND the exact-length mamba/rwkv path, which used to skip every
         # length check and silently overrun the cache)
-        self._bucket(len(req.prompt))
+        if self.cache_mode == "paged":
+            n = len(req.prompt)
+            if n > self.max_seq:
+                raise ValueError(f"prompt length {n} exceeds max_seq "
+                                 f"{self.max_seq}")
+            if self._blocks_needed(req) > self.num_blocks - 1:
+                raise ValueError(
+                    f"request needs {self._blocks_needed(req)} blocks, "
+                    f"exceeds pool of {self.num_blocks - 1}")
+        else:
+            self._bucket(len(req.prompt))
         self._queue.append(req)
 
     def _bucket(self, n: int) -> int:
@@ -220,46 +336,150 @@ class ServeEngine:
         raise ValueError(f"prompt length {n} exceeds largest bucket "
                          f"{self.buckets[-1]}")
 
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case table entries: the request can reach at most
+        prompt+max_new tokens, clipped by the max_seq retire guard."""
+        cap = min(len(req.prompt) + max(req.max_new, 0), self.max_seq)
+        return tiling.cdiv(max(cap, 1), self.block_size)
+
+    def _drain_zero_tokens(self) -> None:
+        """Finish queued max_new<=0 requests with EMPTY completions —
+        they never consume a slot, a prefill, or emit the prefill-sampled
+        token.  ONE pass at the queue head, hoisted out of the per-slot
+        admission loop (the drain used to re-run — and re-read the queue
+        head — once per slot, a burst of zero-token requests cost
+        O(queue·slots) head scans instead of O(queue))."""
+        while self._queue and self._queue[0].max_new <= 0:
+            done = self._queue.pop(0)
+            self.finished[done.rid] = []
+            self.stats["admitted"] += 1
+
     def _admit(self) -> None:
+        t0 = time.perf_counter()
+        self._drain_zero_tokens()
         for i, slot in enumerate(self._slots):
-            # max_new=0 requests finish with an EMPTY completion — never
-            # consume a slot, a prefill, or emit the prefill-sampled token
-            # (which used to be appended unconditionally)
-            while self._queue and self._queue[0].max_new <= 0:
-                done = self._queue.pop(0)
-                self.finished[done.rid] = []
-                self.stats["admitted"] += 1
             if not self._queue:
-                return
+                break
             if not slot.free:
                 continue
-            req = self._queue.pop(0)
-            L = self._bucket(len(req.prompt))
-            toks = jnp.asarray(req.prompt + [0] * (L - len(req.prompt)),
-                               jnp.int32)[None, :]
-            row = init_caches(self.cfg, 1, self.max_seq, self.dtype)
-            cross = None
-            if req.cross_src is not None:
-                cross = (encoder_apply(self.params, self.cfg, req.cross_src)
-                         if self.cfg.family == "encdec" else req.cross_src)
-            last_idx = jnp.asarray([len(req.prompt) - 1], jnp.int32)
+            if self.cache_mode == "paged":
+                if not self._admit_paged(i):
+                    break                   # pool full: head-of-line waits
+            else:
+                self._admit_contiguous(i)
+            self._drain_zero_tokens()
+        self.stats["admit_time_s"] += time.perf_counter() - t0
+
+    def _admit_contiguous(self, i: int) -> None:
+        req = self._queue.pop(0)
+        L = self._bucket(len(req.prompt))
+        toks = jnp.asarray(req.prompt + [0] * (L - len(req.prompt)),
+                           jnp.int32)[None, :]
+        row = init_caches(self.cfg, 1, self.max_seq, self.dtype)
+        cross = None
+        if req.cross_src is not None:
+            cross = (encoder_apply(self.params, self.cfg, req.cross_src)
+                     if self.cfg.family == "encdec" else req.cross_src)
+        last_idx = jnp.asarray([len(req.prompt) - 1], jnp.int32)
+        with self._mesh_ctx():
+            logits, row = self._prefill(self.params, row, toks,
+                                        last_idx, cross)
+        # splice the prefilled row caches into the batch at slot i —
+        # stacked-period leaves are (n_periods, B, ...): batch axis 1
+        self.caches = _splice_slot(self.caches, row, i)
+        self.stats["cache_copies"] += 1
+        self._slots[i] = _Slot(rid=req.rid, pos=len(req.prompt),
+                               remaining=req.max_new, out=[],
+                               temperature=req.temperature)
+        self._key, k = jax.random.split(self._key)
+        first = sample_token(k, logits[0], req.temperature)
+        self._slots[i].out.append(int(first))
+        self._slots[i].remaining -= 1
+        self._last_tok = self._last_tok.at[i, 0].set(first)
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += 1
+        self._retire(i)
+
+    def _admit_paged(self, i: int) -> bool:
+        """Zero-copy admission: reserve this request's worst-case blocks
+        (shared prefix by reference, the rest from the pool) and write
+        its table row.  NO model compute, NO cache copies — prefill
+        happens chunk-at-a-time in subsequent engine steps.  Returns
+        False (leaving the request queued) when the pool is short."""
+        req = self._queue[0]
+        plen = len(req.prompt)
+        total = self._blocks_needed(req)
+        # shareable prefix: FULL prompt blocks only, and never the block
+        # holding the last prompt token — at least one token must run
+        # through prefill to produce the first-sample logits (this also
+        # guarantees writes never target a shared block)
+        hashes = chain_hashes(req.prompt, self.block_size)
+        shared = self.pool.match_prefix(hashes[:(plen - 1)
+                                               // self.block_size])
+        fresh = self.pool.alloc(total - len(shared))
+        if fresh is None:
+            for b in shared:                # roll back the prefix refs
+                self.pool.decref(b)
+            return False
+        self._queue.pop(0)
+        blocks = shared + fresh
+        self._tables[i, :] = 0
+        self._tables[i, :len(blocks)] = blocks
+        self._slots[i] = _Slot(rid=req.rid, pos=plen,
+                               remaining=req.max_new, out=[],
+                               temperature=req.temperature,
+                               prompt=list(req.prompt),
+                               filled=len(shared) * self.block_size,
+                               blocks=blocks, seq=self._admit_seq)
+        self._admit_seq += 1
+        self.stats["admitted"] += 1
+        self.stats["shared_blocks"] += len(shared)
+        self.stats["blocks_hwm"] = max(self.stats["blocks_hwm"],
+                                       self.pool.in_use())
+        return True
+
+    def _prefill_tick(self) -> None:
+        """Advance ONE mid-prefill slot by ONE chunk.  Bounded work per
+        engine step — a 32k prompt costs 32k/C steps, each sharing the
+        step with a full decode tick, so decode traffic never stalls
+        behind a long prompt.  FCFS by admission order: always the
+        OLDEST prefilling request, so a fresh admission into a lower
+        slot index cannot starve a half-prefilled one (and the first
+        completion registers its prefix blocks before later duplicates
+        finish privately)."""
+        filling = [(s.seq, i, s) for i, s in enumerate(self._slots)
+                   if not s.free and s.prompt is not None]
+        for _, i, s in sorted(filling)[:1]:
+            c0 = s.filled
+            real = s.prompt[c0:c0 + self.prefill_chunk]
+            toks = jnp.asarray(
+                real + [0] * (self.prefill_chunk - len(real)),
+                jnp.int32)[None, :]
+            last_idx = jnp.asarray([len(real) - 1], jnp.int32)
+            tables = jnp.asarray(self._tables[i:i + 1])
             with self._mesh_ctx():
-                logits, row = self._prefill(self.params, row, toks,
-                                            last_idx, cross)
-            # splice the prefilled row caches into the batch at slot i —
-            # stacked-period leaves are (n_periods, B, ...): batch axis 1
-            self.caches = _splice_slot(self.caches, row, i)
-            self._slots[i] = _Slot(rid=req.rid, pos=len(req.prompt),
-                                   remaining=req.max_new, out=[],
-                                   temperature=req.temperature)
-            self._key, k = jax.random.split(self._key)
-            first = sample_token(k, logits[0], req.temperature)
-            self._slots[i].out.append(int(first))
-            self._slots[i].remaining -= 1
-            self._last_tok = self._last_tok.at[i, 0].set(first)
-            self.stats["prefills"] += 1
-            self.stats["admitted"] += 1
-            self._retire(i)
+                logits, self.caches = self._prefill(
+                    self.params, self.caches, toks, jnp.int32(c0), tables,
+                    last_idx)
+            s.filled = c0 + len(real)
+            self.stats["prefill_chunks"] += 1
+            if s.filled >= len(s.prompt):
+                # prefill complete: the prompt's full blocks are now
+                # written and immutable — index them for prefix sharing
+                n_full = len(s.prompt) // self.block_size
+                hashes = chain_hashes(s.prompt, self.block_size)
+                self.pool.register(hashes[:n_full],
+                                   [int(b) for b in
+                                    self._tables[i, :n_full]])
+                s.prompt = None
+                self._key, k = jax.random.split(self._key)
+                first = sample_token(k, logits[0], s.temperature)
+                s.out.append(int(first))
+                s.remaining -= 1
+                self._last_tok = self._last_tok.at[i, 0].set(first)
+                self.stats["prefills"] += 1
+                self._retire(i)
+            return                          # one chunk per step
 
     def _retire(self, i: int) -> None:
         s = self._slots[i]
@@ -270,6 +490,10 @@ class ServeEngine:
                  s.out[-1] == self.eos_id))
         if done:
             self.finished[s.rid] = s.out
+            if self.cache_mode == "paged":
+                for b in s.blocks:
+                    self.pool.decref(b)
+                self._tables[i, :] = 0
             self._slots[i] = _Slot()
 
     @property
@@ -279,21 +503,34 @@ class ServeEngine:
     def pending(self) -> int:
         return len(self._queue) + self.active
 
-    # ---- one engine step = admit + one lockstep decode ----
+    # ---- one engine step = admit + prefill chunk + one lockstep decode ----
 
     def step(self) -> None:
         self._admit()
-        if self.active == 0:
+        if self.cache_mode == "paged":
+            self._prefill_tick()
+        decoding = [s.decoding for s in self._slots]
+        if not any(decoding):
             return
-        pos = jnp.asarray([s.pos for s in self._slots], jnp.int32)
+        pos = jnp.asarray([s.pos if s.decoding else 0
+                           for s in self._slots], jnp.int32)
         with self._mesh_ctx():
-            logits, self.caches = self._decode(self.params, self.caches,
-                                               self._last_tok, pos)
+            if self.cache_mode == "paged":
+                # non-decoding rows get all-sentinel tables: their writes
+                # land in block 0, never in a mid-prefill slot's blocks
+                masked = np.where(np.asarray(decoding)[:, None],
+                                  self._tables, 0)
+                logits, self.caches = self._decode(
+                    self.params, self.caches, self._last_tok, pos,
+                    jnp.asarray(masked))
+            else:
+                logits, self.caches = self._decode(
+                    self.params, self.caches, self._last_tok, pos)
         self.stats["decode_steps"] += 1
         self._key, k = jax.random.split(self._key)
         keys = jax.random.split(k, self.n_slots)
         for i, s in enumerate(self._slots):
-            if s.free:
+            if not s.decoding:
                 continue
             tok = int(sample_token(keys[i], logits[i], s.temperature))
             s.out.append(tok)

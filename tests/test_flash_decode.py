@@ -157,7 +157,7 @@ def test_engine_decode_resolves_flash_decode_at_long_kv():
     cfg = registry.reduced_config("qwen1.5-0.5b")
     params = init_lm(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, n_slots=2, max_seq=2048,
-                      prefill_buckets=(8,))
+                      prefill_buckets=(8,), cache_mode="contiguous")
     assert eng.decode_attn_impl == "flash_decode"
     step = make_decode_step(cfg.replace(attn_impl=eng.decode_attn_impl))
     toks = jnp.zeros((2, 1), jnp.int32)
@@ -167,7 +167,7 @@ def test_engine_decode_resolves_flash_decode_at_long_kv():
         "decode step does not route through the flash_decode kernel"
     # short cache: naive decode, and NO pallas_call in its decode step
     short = ServeEngine(cfg, params, n_slots=2, max_seq=64,
-                        prefill_buckets=(8,))
+                        prefill_buckets=(8,), cache_mode="contiguous")
     assert short.decode_attn_impl == "naive"
     jaxpr_s = jax.make_jaxpr(make_decode_step(
         cfg.replace(attn_impl=short.decode_attn_impl)))(
@@ -175,7 +175,8 @@ def test_engine_decode_resolves_flash_decode_at_long_kv():
     assert "pallas_call" not in str(jaxpr_s)
     # dualmode engine decode stays on the whole-row unit
     dual = ServeEngine(cfg.replace(softmax_impl="dualmode"), params,
-                      n_slots=2, max_seq=2048, prefill_buckets=(8,))
+                      n_slots=2, max_seq=2048, prefill_buckets=(8,),
+                      cache_mode="contiguous")
     assert dual.decode_attn_impl == "naive"
 
 
@@ -186,7 +187,7 @@ def test_engine_decode_step_logits_match_naive():
     cfg = registry.reduced_config("qwen1.5-0.5b")
     params = init_lm(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, n_slots=3, max_seq=1024,
-                      prefill_buckets=(8,))
+                      prefill_buckets=(8,), cache_mode="contiguous")
     assert eng.decode_attn_impl == "flash_decode"
     # mixed-depth slots over a prefilled cache
     outs = eng.run([Request(rid=0, prompt=[1, 2, 3], max_new=2),

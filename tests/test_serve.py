@@ -82,10 +82,12 @@ def test_max_new_zero_emits_no_tokens():
 
 
 def test_overlong_prompt_raises_bucketed():
+    # bucket semantics are a CONTIGUOUS-path concept (paged prefill is
+    # chunked and has no buckets) — pin the mode under test
     cfg = registry.reduced_config("qwen1.5-0.5b")
     params = init_lm(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(cfg, params, n_slots=1, max_seq=32,
-                      prefill_buckets=(8,))
+                      prefill_buckets=(8,), cache_mode="contiguous")
     with pytest.raises(ValueError, match="exceeds"):
         eng.submit(Request(rid=0, prompt=list(range(9)), max_new=1))
     assert eng.pending() == 0                  # nothing left half-queued
@@ -147,3 +149,161 @@ def test_slot_reuse_more_requests_than_slots():
     assert sorted(outs) == list(range(7))
     assert all(len(v) == 3 for v in outs.values())
     assert eng.stats["admitted"] == 7
+
+
+# ---------------- paged KV cache ----------------
+
+def test_paged_matches_contiguous_mixed_workload():
+    """Token-level equivalence of the two cache layouts over a mixed
+    greedy workload: ragged prompt lengths, EOS retires mid-stream, a
+    repeated prompt that exercises prefix sharing, more requests than
+    slots.  Same seed, same params — completions must be IDENTICAL."""
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+
+    def mk_reqs():
+        return [Request(rid=0, prompt=list(range(5, 25)), max_new=6),
+                Request(rid=1, prompt=list(range(7, 40)), max_new=8),
+                Request(rid=2, prompt=[3, 1, 4, 1, 5, 9, 2, 6], max_new=5),
+                Request(rid=3, prompt=list(range(5, 25)), max_new=4),
+                Request(rid=4, prompt=list(range(40, 44)), max_new=0),
+                Request(rid=5, prompt=list(range(10, 48)), max_new=7)]
+
+    paged = ServeEngine(cfg, params, n_slots=3, max_seq=64, seed=0,
+                        cache_mode="paged", prefill_chunk=16)
+    assert paged.cache_mode == "paged"
+    contig = ServeEngine(cfg, params, n_slots=3, max_seq=64, seed=0,
+                         cache_mode="contiguous", prefill_buckets=(16, 64))
+    out_p = paged.run(mk_reqs())
+    out_c = contig.run(mk_reqs())
+    assert out_p == out_c
+    # paged admission never copies a cache tree; contiguous splices one
+    # row per prefill
+    assert paged.stats["cache_copies"] == 0
+    assert contig.stats["cache_copies"] == contig.stats["prefills"]
+    # every block went back: retirement = pure decref, no leaks
+    assert paged.pool.in_use() == 0
+    assert paged.active == 0 and contig.active == 0
+
+
+def test_paged_eos_retire_matches_contiguous():
+    cfg = registry.reduced_config("yi-6b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    ref = ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                      cache_mode="contiguous")
+    out = ref.run([Request(rid=0, prompt=[1, 2, 3], max_new=10)])[0]
+    eos = out[2]
+    for mode in ("paged", "contiguous"):
+        eng = ServeEngine(cfg, params, n_slots=1, max_seq=32, eos_id=eos,
+                          cache_mode=mode)
+        got = eng.run([Request(rid=0, prompt=[1, 2, 3], max_new=10)])[0]
+        assert got == out[:out.index(eos) + 1], mode
+
+
+def test_paged_prefix_sharing_blocks_accounted():
+    """A second request extending an already-prefilled prompt reuses its
+    full blocks by reference: shared_blocks counts them, the shared
+    prefill is a single chunk, and the tokens still match contiguous."""
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    base = list(range(5, 45))                        # 40 toks = 5 blocks(8)
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=128, seed=0,
+                      cache_mode="paged", prefill_chunk=16)
+    assert eng.block_size == 8
+    eng.run([Request(rid=0, prompt=base, max_new=4)])
+    assert eng.stats["shared_blocks"] == 0
+    chunks_before = eng.stats["prefill_chunks"]
+    out = eng.run([Request(rid=1, prompt=base + [77, 78], max_new=4)])
+    # usable prefix = hashes[:(42-1)//8] = 5 full blocks, all registered
+    assert eng.stats["shared_blocks"] == 5
+    assert eng.stats["prefill_chunks"] == chunks_before + 1
+    contig = ServeEngine(cfg, params, n_slots=2, max_seq=128, seed=0,
+                         cache_mode="contiguous")
+    contig.run([Request(rid=0, prompt=base, max_new=4)])
+    ref = contig.run([Request(rid=1, prompt=base + [77, 78], max_new=4)])
+    assert out[1] == ref[1]
+
+
+def test_paged_chunked_prefill_interleaves_decode():
+    """A long prompt admitted while another slot is decoding must not
+    stall it: decode ticks keep firing between prefill chunks."""
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=128, seed=0,
+                      cache_mode="paged", prefill_chunk=8)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=30))
+    eng.step()                                   # admit + first decode
+    assert eng._slots[0].decoding
+    eng.submit(Request(rid=1, prompt=list(range(5, 85)), max_new=8))
+    decoded_before = len(eng._slots[0].out)
+    steps = 0
+    while not eng._slots[1].decoding:
+        eng.step()                               # rid 1 prefills 80/8 chunks
+        steps += 1
+        assert steps < 50
+    # rid 0 decoded one token per engine step THROUGHOUT rid 1's prefill
+    assert len(eng._slots[0].out) - decoded_before >= 80 // 8
+    out = eng.run([])                            # drain
+    contig = ServeEngine(cfg, params, n_slots=2, max_seq=128, seed=0,
+                         cache_mode="contiguous")
+    ref = contig.run([Request(rid=0, prompt=[1, 2, 3], max_new=30),
+                      Request(rid=1, prompt=list(range(5, 85)), max_new=8)])
+    assert out == ref
+
+
+def test_paged_overlong_and_overcapacity_raise():
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                      cache_mode="paged")
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(Request(rid=0, prompt=list(range(33)), max_new=1))
+    # within max_seq but over the pool's worst-case reach
+    small = ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                        cache_mode="paged", num_blocks=2)
+    with pytest.raises(ValueError, match="exceeds"):
+        small.submit(Request(rid=0, prompt=list(range(20)), max_new=8))
+    assert eng.pending() == 0 and small.pending() == 0
+
+
+def test_paged_rejects_unsupported_arch():
+    cfg = registry.reduced_config("rwkv6-1.6b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, n_slots=1, max_seq=16, cache_mode="paged")
+    # auto quietly falls back for state-carrying mixers
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=16)
+    assert eng.cache_mode == "contiguous"
+
+
+class _CountingInt(int):
+    """int that counts how often it is compared via <= (the admission
+    loop's drain predicate reads `req.max_new <= 0`)."""
+    reads = 0
+
+    def __le__(self, other):
+        _CountingInt.reads += 1
+        return int(self) <= other
+
+
+def test_zero_token_drain_cost_is_per_queue_not_per_slot():
+    """The max_new<=0 drain runs ONCE per admission pass, not once per
+    slot: with every slot busy, the queue head's max_new is read O(1)
+    times per step — the old in-loop drain re-read it once per slot."""
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, n_slots=4, max_seq=32, seed=0,
+                      prefill_buckets=(8,))
+    eng.run([Request(rid=i, prompt=[i + 1], max_new=2)
+             for i in range(4)])                 # warm compile caches
+    for i in range(4):                           # occupy every slot
+        eng.submit(Request(rid=10 + i, prompt=[i + 1], max_new=50))
+    for _ in range(4):              # paged prefill: one chunk per step
+        eng.step()
+    assert eng.active == 4 and all(s.decoding for s in eng._slots)
+    _CountingInt.reads = 0
+    eng.submit(Request(rid=99, prompt=[7], max_new=_CountingInt(3)))
+    eng._admit()
+    # one drain pass reads the head once; the slot loop (4 busy slots)
+    # must not re-read it
+    assert _CountingInt.reads <= 2, _CountingInt.reads
