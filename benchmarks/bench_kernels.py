@@ -88,15 +88,19 @@ def main_flash(json_path: str | None = None) -> None:
 
 
 def main_flash_int(json_path: str | None = None) -> None:
-    """Int-path shoot-out: the blocked bit-accurate kernel vs its two
-    neighbours — naive dual-mode (same words, whole-row, O(S*T) scores
-    materialized) and float blocked flash (same streaming, float words).
+    """Int-path shoot-out: the one-sweep snapped kernel and the
+    three-sweep classic oracle vs their neighbours — naive dual-mode
+    (whole-row unit, O(S*T) scores materialized) and float blocked flash
+    (same streaming, float words).
 
-    Records BENCH_flash_int.json: the cost of bit-exactness (3 KV sweeps)
-    next to what it replaces.  Off-TPU the Pallas number is interpret
-    mode — a correctness checkpoint, not a speed claim.  Also records the
-    max |naive_dualmode - flash_pallas_int| parity residual, which is
-    pure f32 prob@v reduction-order noise (the prob words are identical).
+    Records BENCH_flash_int.json.  Off-TPU the Pallas numbers are
+    interpret mode — a correctness checkpoint, not a speed claim.  The
+    ``sweeps_rows`` section carries one row per int kernel (sweeps: 1 =
+    snapped one-sweep, sweeps: 3 = classic oracle) with its word-parity
+    residual against the matching whole-row unit, measured through an
+    identity-v probe (output rows ARE the normalized prob words, so the
+    residual is exactly 0.0 when the words are bit-identical — no f32
+    prob@v reduction-order noise in the way).
     """
     rng = np.random.default_rng(0)
     b, s, k, g, h = 1, 512, 2, 2, 64
@@ -106,6 +110,8 @@ def main_flash_int(json_path: str | None = None) -> None:
     q_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     valid = jnp.ones((b, s), bool)
 
+    from repro.kernels.flash_attention_int import flash_attention_pallas_int3
+
     impls = {
         "naive_dualmode": jax.jit(lambda q_, k_, v_: _naive_sdpa(
             q_, k_, v_, q_pos=q_pos, kv_valid=valid,
@@ -113,6 +119,8 @@ def main_flash_int(json_path: str | None = None) -> None:
         "flash_jax_float": jax.jit(lambda q_, k_, v_: flash_attention(
             q_, k_, v_, q_pos=q_pos, kv_valid=valid, block=128)),
         "flash_pallas_int": lambda q_, k_, v_: flash_attention_pallas_int(
+            q_, k_, v_, q_pos=q_pos, kv_valid=valid),
+        "flash_pallas_int3": lambda q_, k_, v_: flash_attention_pallas_int3(
             q_, k_, v_, q_pos=q_pos, kv_valid=valid),
     }
     results = {"shape": {"b": b, "s": s, "kv_heads": k, "groups": g,
@@ -126,15 +134,66 @@ def main_flash_int(json_path: str | None = None) -> None:
         results["us_per_call"][name] = t
         emit(f"kernels/flash_int_{name}_us", t,
              f"backend={jax.default_backend()}")
-    parity = float(jnp.abs(outs["flash_pallas_int"]
+    parity = float(jnp.abs(outs["flash_pallas_int3"]
                            - outs["naive_dualmode"]).max())
     results["parity_max_abs_vs_naive_dualmode"] = parity
     emit("kernels/flash_int_parity_max_abs", parity * 1e6,
          "combine reduction-order residual, x1e-6 (prob words identical)")
+
+    # word-parity rows: identity-v probe (output rows = normalized prob
+    # words) at a small square shape, each kernel vs its whole-row oracle
+    sp = 128
+    qp = jnp.asarray(rng.normal(size=(1, sp, 1, 1, 32)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(1, sp, 1, 32)), jnp.float32)
+    vp = jnp.eye(sp, dtype=jnp.float32)[None, :, None, :]
+    probe_pos = jnp.arange(sp)[None]
+    probe_valid = jnp.ones((1, sp), bool)
+
+    def probe(kern, oracle_softmax):
+        got = kern(qp, kp, vp, q_pos=probe_pos, kv_valid=probe_valid)
+        want = _naive_sdpa(qp, kp, vp, q_pos=probe_pos,
+                           kv_valid=probe_valid,
+                           softmax_impl=oracle_softmax)
+        return float(jnp.abs(got - want).max())
+
+    results["sweeps_rows"] = [
+        {"impl": "flash_pallas_int", "sweeps": 1,
+         "oracle": "whole-row softmax_snap (naive dualmode_snap)",
+         "word_parity_residual": probe(flash_attention_pallas_int,
+                                       "dualmode_snap")},
+        {"impl": "flash_pallas_int3", "sweeps": 3,
+         "oracle": "whole-row softmax_int (naive dualmode)",
+         "word_parity_residual": probe(flash_attention_pallas_int3,
+                                       "dualmode")},
+    ]
+    for row in results["sweeps_rows"]:
+        emit(f"kernels/flash_int_sweeps{row['sweeps']}_word_parity",
+             row["word_parity_residual"],
+             f"{row['impl']} vs {row['oracle']}")
+        assert row["word_parity_residual"] == 0.0, row
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(results, fh, indent=2)
         print(f"# wrote {os.path.abspath(json_path)}")
+
+
+def check_flash_int_schema(json_path: str) -> None:
+    """Assert BENCH_flash_int.json carries the ISSUE 7 contract: both a
+    sweeps-1 (snapped one-sweep) and a sweeps-3 (classic oracle) row,
+    each with an exactly-zero word-parity residual vs its whole-row
+    reference."""
+    with open(json_path) as fh:
+        d = json.load(fh)
+    for key in ("backend", "us_per_call", "sweeps_rows"):
+        assert key in d, f"BENCH_flash_int.json missing {key!r}"
+    for impl in ("flash_pallas_int", "flash_pallas_int3"):
+        assert impl in d["us_per_call"]
+    sweeps = {row["sweeps"]: row for row in d["sweeps_rows"]}
+    assert set(sweeps) == {1, 3}, f"sweeps rows: {sorted(sweeps)}"
+    for n, row in sweeps.items():
+        assert float(row["word_parity_residual"]) == 0.0, \
+            f"sweeps={n} kernel words drifted from the whole-row unit"
+    print(f"# BENCH_flash_int schema OK: {json_path}")
 
 
 def main_flash_bwd(json_path: str | None = None) -> None:
@@ -511,6 +570,28 @@ def main_serve(json_path: str | None = None, *, n_requests: int = 12,
         emit(f"serve/{mode}_tok_s", run["wall_s"] / max(run["tokens"], 1)
              * 1e6, f"{run['tokens']} tokens, conc_hwm="
              f"{run['concurrent_hwm']}, copies={run['cache_copies']}")
+
+    # mixed per-phase impls (ISSUE 7 / ROADMAP carried item): float
+    # prefill + dual-mode decode — prompt ingestion at float speed, every
+    # GENERATED token's attention through the bit-accurate snapped int
+    # split-KV path.  Needs a cache deep enough for the decode resolution
+    # to pick flash_decode (not whole-row naive), hence its own max_seq.
+    mixed_seq = 2048
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=mixed_seq, seed=0,
+                      cache_mode="contiguous", prefill_buckets=(32,),
+                      decode_softmax_impl="dualmode")
+    run = _run_engine_traced(eng, mk_reqs())
+    run.update({"max_seq": mixed_seq,
+                "prefill_attn_impl": eng.prefill_attn_impl,
+                "prefill_softmax_impl": eng.prefill_softmax_impl,
+                "decode_attn_impl": eng.decode_attn_impl,
+                "decode_softmax_impl": eng.decode_softmax_impl})
+    assert eng.decode_attn_impl == "flash_decode", run
+    results["mixed_phase"] = run
+    emit("serve/mixed_float_prefill_dualmode_decode_tok_s",
+         run["wall_s"] / max(run["tokens"], 1) * 1e6,
+         f"{run['tokens']} tokens, decode={eng.decode_attn_impl}"
+         f"/{eng.decode_softmax_impl}")
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(results, fh, indent=2)
@@ -540,6 +621,11 @@ def check_serve_schema(json_path: str) -> None:
     dpp = paged["decode_ticks_per_prefill_step"]
     assert dpp is not None and dpp >= 1.0, \
         f"decode stalled during chunked prefill ({dpp})"
+    mixed = d["mixed_phase"]
+    assert mixed["tokens"] > 0 and mixed["tokens_per_s"] > 0
+    assert mixed["decode_attn_impl"] == "flash_decode"
+    assert mixed["decode_softmax_impl"] == "dualmode"
+    assert mixed["prefill_softmax_impl"] == "float"
     print(f"# BENCH_serve schema OK: {json_path}")
 
 
@@ -548,6 +634,13 @@ if __name__ == "__main__":
         i = sys.argv.index("--ring-only")
         main_flash_ring(sys.argv[i + 1] if len(sys.argv) > i + 1
                         else "BENCH_flash_ring.json")
+        sys.exit(0)
+    if "--flash-int-only" in sys.argv:
+        i = sys.argv.index("--flash-int-only")
+        path = (sys.argv[i + 1] if len(sys.argv) > i + 1
+                else "BENCH_flash_int.json")
+        main_flash_int(path)
+        check_flash_int_schema(path)
         sys.exit(0)
     if "--serve-only" in sys.argv:
         i = sys.argv.index("--serve-only")

@@ -31,8 +31,10 @@ import math
 
 import jax.numpy as jnp
 
+import jax
+
 from .fixedpoint import (
-    EXP_FRAC, I32, IN_FRAC, T_FRAC,
+    EXP_FRAC, I32, IN_FRAC, IN_MAX, IN_MIN, T_FRAC,
     dequantize, floor_log2, mantissa_frac, quantize, sat_rshift,
 )
 from .pwl import exp2_frac_int, log2_mant_int
@@ -164,9 +166,11 @@ def silu_int(z_fx):
 # three KV sweeps — max, sum, emit — each an online fold whose carry
 # (m, then l) never leaves the int domain, and ANY blocking schedule
 # telescopes to the exact whole-row :func:`softmax_int` words.  These
-# three steps are jnp-traceable and shared verbatim by the Pallas kernel
-# body (``kernels/flash_attention_int.py``) and the pure-jnp blocked
-# oracle below.
+# three steps are jnp-traceable and shared verbatim by the three-sweep
+# Pallas kernel body (``flash_pallas_int3``) and the pure-jnp blocked
+# oracle below.  The SNAPPED-max mode further down removes the
+# three-sweep restriction: snapping the max to a power of two makes the
+# rescale an exact bit-shift, yielding a true one-sweep word monoid.
 
 def online_max_int(m, x_blk, axis: int = -1):
     """Sweep 1 fold: running row max.  Init carry with ``PHANTOM_Q``."""
@@ -219,10 +223,260 @@ def softmax_int_blocked(x_fx, block: int, guard_shift: int | None = None):
         [online_probs_int(m, l, b, guard_shift) for b in blocks], axis=-1)
 
 
+# --- snapped-max mode: the word-exact online-softmax monoid ----------------
+#
+# Snap the running max UP to a multiple of 2**T_FRAC and the PWL rescale
+# becomes multiplicative by construction: t_j - M keeps t_j's low T_FRAC
+# bits (M is a multiple of 2**T_FRAC), so the PWL fraction word
+# p_j = exp2_frac(t_j mod 2**T_FRAC) is MAX-INDEPENDENT and the max only
+# selects an integer DEPTH d_j = (M - t_j) >> T_FRAC.  A max move by k
+# octaves relabels every depth by +k — a pure shift, exact on int words.
+#
+# A scalar normalizer carry is still NOT schedule-invariant (sum-then-
+# shift != shift-then-sum: 1+1 = 2, >>1 -> 1, while per-element 0+0 = 0),
+# so the carry keeps one int32 partial sum PER DEPTH — a carry-save /
+# Kulisch-style state (m, S[0..N_SNAP_BUCKETS)) whose merge is slide-by-k
+# plus elementwise add: a TRUE monoid, bit-exact associative AND
+# commutative, with identity (SNAP_MIN, zeros).  Depths beyond the last
+# bucket are the unit's dynamic-range floor (N_SNAP_BUCKETS octaves below
+# the max): those words are defined to carry exactly zero mass, which is
+# schedule-invariant because an element's final depth depends only on the
+# final max.  The finish collapses l = sum_d (S_d >> d) — each element
+# shifted exactly once, after all same-depth words were summed at full
+# width.
+#
+# Normalization is ONE f32 division at the end (SOLE-style guaranteed
+# normalization): numerators float(p_j) * 2**-d_j are EXACT in f32 (p_j
+# is a 15-bit word, the scale an exact power of two), so a streaming
+# accumulator rescaled by 2**-k is bit-identical to the whole-row
+# numerator — only f32 summation order can differ between schedules.
+
+SNAP_MIN = -(1 << 30)     # sentinel carry: a multiple of 2**T_FRAC far
+                          # below any real score's log2-domain word
+N_SNAP_BUCKETS = 16       # depth range = the unit's 16-octave dynamic range
+
+
+def to_snap_domain(x_fx):
+    """ABSOLUTE log2-domain score t = x*log2(e) @ 2**-T_FRAC (int32).
+
+    Unlike :func:`_to_log2_domain` this does not subtract a max first —
+    snapped mode needs max-independent words.  |t| <= ~3.03e6 for any
+    S5.10 input, so the int32 product has headroom.  ``PHANTOM_Q``
+    sentinel words map straight to ``SNAP_MIN`` (their true t would
+    overflow int32, and they must carry exactly zero mass anyway).
+    """
+    x = x_fx.astype(I32)
+    t = (jnp.clip(x, IN_MIN, IN_MAX) * I32(LOG2E_Q)) \
+        >> (IN_FRAC + _LOG2E_FRAC - T_FRAC)
+    return jnp.where(x <= I32(PHANTOM_Q), I32(SNAP_MIN), t)
+
+
+def snap_max_int(t_max):
+    """Ceil-snap a log2-domain word UP to a multiple of 2**T_FRAC.
+
+    exp2 of the snapped max is then exactly a power of two, so every
+    rescale-by-``exp2(m_old - m_new)`` is an arithmetic shift.  SNAP_MIN
+    is itself a multiple of 2**T_FRAC, so the sentinel is a fixed point.
+    """
+    t_max = t_max.astype(I32)
+    return ((t_max + I32((1 << T_FRAC) - 1)) >> T_FRAC) << T_FRAC
+
+
+def snap_prob_word(t, guard_shift: int):
+    """The max-independent (guard-shifted) probability word of ``t``.
+
+    ``t`` is an absolute :func:`to_snap_domain` word; because the snapped
+    max is a multiple of 2**T_FRAC, ``t - M`` keeps t's low T_FRAC bits,
+    so the PWL evaluates on ``t mod 2**T_FRAC`` alone — a 15-bit word in
+    [2**EXP_FRAC, 2**(EXP_FRAC+1)) >> guard, independent of any max.
+    SNAP_MIN sentinels produce the literal 0 word.
+    """
+    p = exp2_frac_int(t & I32((1 << T_FRAC) - 1)) >> guard_shift
+    return jnp.where(t > I32(SNAP_MIN), p, 0)
+
+
+def snap_scale_f32(d):
+    """EXACT float32 ``2**-d`` for int depth d >= 0.
+
+    Built by exponent-field construction (not a transcendental), so every
+    consumer — whole-row oracle, one-sweep kernel, decode split fold,
+    ring hop merge — multiplies by bit-identical scales.  Depths past the
+    f32 normal range collapse to exact +0.0 (those words are below the
+    dynamic-range floor anyway).
+    """
+    e = jnp.clip(I32(127) - d.astype(I32), 0, 254)
+    return jax.lax.bitcast_convert_type(e << 23, jnp.float32)
+
+
+def slide_buckets_int(S, k):
+    """Relabel a bucket vector to a max ``k`` octaves deeper (k >= 0).
+
+    S'[d] = S[d - k] with zero-fill; words sliding past the last bucket
+    are dropped — their elements sit >= N_SNAP_BUCKETS octaves below the
+    new max, the exactly-zero floor.  Slides compose additively
+    (slide(k1) o slide(k2) == slide(k1+k2)), which is what makes the
+    merge associative on ALL states, not just reachable ones.
+    """
+    idx = jnp.arange(N_SNAP_BUCKETS, dtype=I32)
+    src = idx - k
+    take = jnp.take_along_axis(
+        S, jnp.clip(src, 0, N_SNAP_BUCKETS - 1), axis=-1)
+    return jnp.where(src >= 0, take, 0)
+
+
+def online_partial_int(x_blk, guard_shift: int, v=None, axis: int = -1):
+    """Self-contained snapped partial (m, S, acc) of one block of words.
+
+    The int twin of :func:`repro.kernels.datapath.online_softmax_partial`:
+    ``m`` is the block's own ceil-snapped max (keepdims at ``axis``),
+    ``S`` the per-depth bucket sums (bucket axis appended LAST), ``acc``
+    the f32 unnormalized weighted-value accumulator (or the exact f32
+    numerators themselves when ``v`` is None).  All-phantom blocks
+    produce the merge identity ``(SNAP_MIN, 0, 0)``.
+    """
+    t = to_snap_domain(x_blk)
+    m = snap_max_int(jnp.max(t, axis=axis, keepdims=True))
+    p = snap_prob_word(t, guard_shift)
+    d = (m >> T_FRAC) - (t >> T_FRAC)
+    S = jnp.stack([jnp.sum(jnp.where(d == kk, p, 0), axis=axis)
+                   for kk in range(N_SNAP_BUCKETS)], axis=-1)
+    num = p.astype(jnp.float32) * snap_scale_f32(d)
+    acc = num if v is None else jnp.einsum("...n,...nd->...d", num, v)
+    return m, S, acc
+
+
+def online_merge_int(part_a, part_b):
+    """Word-exact merge of two snapped partials — the int monoid fold.
+
+    The int twin of :func:`repro.kernels.datapath.online_softmax_merge`:
+    each part is ``(m, S, acc)`` with ``m`` (..., 1) int32 snapped,
+    ``S`` (..., N_SNAP_BUCKETS) int32 bucket sums, ``acc`` (..., d) f32.
+
+        m   = max(m_a, m_b)
+        S   = slide(S_a, (m-m_a)/2**T_FRAC) + slide(S_b, ...)
+        acc = acc_a * 2**-k_a + acc_b * 2**-k_b   (exact f32 scales)
+
+    ``m`` and ``S`` are bit-exact associative AND commutative (the slide
+    is an exact relabeling, bucket adds are int32); ``acc`` rescales are
+    exact f32 multiplies, so only its ADD order varies with the schedule.
+    Identity element: ``(SNAP_MIN, 0, 0)``.
+    """
+    m_a, S_a, acc_a = part_a
+    m_b, S_b, acc_b = part_b
+    m = jnp.maximum(m_a, m_b)
+    k_a = (m - m_a) >> T_FRAC
+    k_b = (m - m_b) >> T_FRAC
+    S = slide_buckets_int(S_a, k_a) + slide_buckets_int(S_b, k_b)
+    acc = acc_a * snap_scale_f32(k_a) + acc_b * snap_scale_f32(k_b)
+    return m, S, acc
+
+
+def online_merge_n_int(m, S, acc, axis: int = 0):
+    """Vectorized n-way fold of snapped partials stacked along ``axis``.
+
+    The int twin of :func:`repro.kernels.datapath.online_softmax_merge_n`
+    (the split-KV decode fold): one max, one slide, one sum.  ``axis``
+    stays as a singleton on m/acc (shape-stable for the caller); the
+    bucket axis of ``S`` is last.  Sentinel ``(SNAP_MIN, 0, 0)`` partials
+    contribute exact zeros — including empty splits is a no-op.
+    """
+    m_all = jnp.max(m, axis=axis, keepdims=True)
+    k = (m_all - m) >> T_FRAC
+    S = jnp.sum(slide_buckets_int(S, k), axis=axis, keepdims=True)
+    acc = jnp.sum(acc * snap_scale_f32(k), axis=axis, keepdims=True)
+    return m_all, S, acc
+
+
+def online_finish_int(S):
+    """Exact bucketed normalizer: l = sum_d (S_d >> d), clamped >= 1.
+
+    Scale 2**-(EXP_FRAC - guard_shift).  Each element was summed into
+    exactly one bucket at full width BEFORE its depth shift, so l is
+    schedule-invariant (the shift distributes over nothing).  Reduces the
+    trailing bucket axis away.
+    """
+    l = jnp.sum(S >> jnp.arange(N_SNAP_BUCKETS, dtype=I32), axis=-1)
+    return jnp.maximum(l, 1)
+
+
+def snap_row_stats(x_fx, axis: int = -1, guard_shift: int | None = None):
+    """Whole-row snapped statistics (p, d, l) — the streaming oracle.
+
+    p: max-independent guard-shifted probability words (0 for sentinels),
+    d: per-element depth below the ceil-snapped row max,
+    l: the exact bucketed normalizer (keepdims at ``axis``).
+
+    The guard-shift rule matches :func:`softmax_int`: rows up to
+    2**(16+guard_shift) elements cannot overflow a bucket (each element
+    lands in exactly ONE bucket).
+    """
+    n = x_fx.shape[axis]
+    if guard_shift is None:
+        guard_shift = max(0, n.bit_length() - 16)
+    m, S, _ = online_partial_int(x_fx, guard_shift, axis=axis)
+    t = to_snap_domain(x_fx)
+    p = snap_prob_word(t, guard_shift)
+    d = (m >> T_FRAC) - (t >> T_FRAC)
+    return p, d, jnp.expand_dims(online_finish_int(S), axis)
+
+
+def softmax_snap(x_fx, axis: int = -1, guard_shift: int | None = None):
+    """Snapped-max normal mode over ``axis``: x_fx S5.10 -> f32 probs.
+
+    prob_j = float(p_j) * 2**-d_j / float(l) — exact f32 numerators, one
+    deterministic IEEE division.  This is the whole-row reference every
+    streaming schedule telescopes to: the one-sweep kernel, the decode
+    split fold, and the ring hop fold all reproduce (p, d, l) word-exact
+    and therefore these exact probabilities.
+    """
+    p, d, l = snap_row_stats(x_fx, axis=axis, guard_shift=guard_shift)
+    return p.astype(jnp.float32) * snap_scale_f32(d) / l.astype(jnp.float32)
+
+
+def softmax_snap_blocked(x_fx, block: int, guard_shift: int | None = None):
+    """Whole-row snapped mode evaluated as a blocked monoid fold.
+
+    Pure-jnp driver over the last axis — the oracle that PROVES the
+    telescoping: partials of arbitrary blocks fold with
+    :func:`online_merge_int` and the result is bit-identical in (m, S)
+    — hence in l and the probability words — to :func:`softmax_snap`
+    for any ``block`` (divisible or not).
+    """
+    n = x_fx.shape[-1]
+    if guard_shift is None:
+        guard_shift = max(0, n.bit_length() - 16)
+    x_fx = x_fx.astype(I32)
+    lead = x_fx.shape[:-1]
+    zero_acc = jnp.zeros(lead + (1,), jnp.float32)   # prob-word-only fold
+    part = (jnp.full(lead + (1,), SNAP_MIN, I32),
+            jnp.zeros(lead + (N_SNAP_BUCKETS,), I32),
+            zero_acc)
+    for i in range(0, n, block):
+        m_b, S_b, _ = online_partial_int(x_fx[..., i:i + block], guard_shift)
+        part = online_merge_int(part, (m_b, S_b, zero_acc))
+    m, S, _ = part
+    t = to_snap_domain(x_fx)
+    p = snap_prob_word(t, guard_shift)
+    d = (m >> T_FRAC) - (t >> T_FRAC)
+    l = jnp.expand_dims(online_finish_int(S), -1)
+    return p.astype(jnp.float32) * snap_scale_f32(d) / l.astype(jnp.float32)
+
+
 # --- float wrappers (quantize -> int unit -> dequantize) --------------------
 def softmax_dualmode(x, axis: int = -1):
     """float in/out softmax through the bit-accurate unit (normal mode)."""
     return dequantize(softmax_int(quantize(x), axis=axis), EXP_FRAC)
+
+
+def softmax_dualmode_snap(x, axis: int = -1):
+    """float in/out softmax through the SNAPPED-max unit.
+
+    The whole-row oracle of every streamed dual-mode path (one-sweep int
+    flash, dual-mode decode, dual-mode ring): identical word pipeline,
+    one f32 division.  Registered as softmax impl 'dualmode_snap' so the
+    naive attention path serves as the snapped reference for free.
+    """
+    return softmax_snap(quantize(x), axis=axis)
 
 
 def gelu_dualmode(z):

@@ -212,6 +212,13 @@ def online_softmax_merge_n(m, l, acc, axis: int = 0):
     partials ``(MASK_VALUE, 0, 0)`` contribute exact IEEE zeros, so
     including empty splits is a bit-exact no-op — same identity law as
     the pairwise merge, checked in tests/test_datapath.py.
+
+    INT twins: the bit-accurate unit has the same monoid structure once
+    the running max is snapped to a power of two — see
+    ``repro.core.softmax_unit.online_merge_int`` (pairwise, the ring's
+    fold) and ``online_merge_n_int`` (this n-way form, the dual-mode
+    decode's split fold), where the state is (m snapped, S depth-bucket
+    words, acc) and every rescale is an exact shift.
     """
     m_all = jnp.max(m, axis=axis, keepdims=True)
     c = jnp.exp2((m - m_all) * LOG2E)

@@ -3,39 +3,56 @@
 One place maps config strings to callables for the three datapath
 consumers, so model code never switches on strings itself:
 
-  softmax    'float' | 'dualmode'            (attention probabilities)
+  softmax    'float' | 'dualmode' | 'dualmode_snap'   (attention probs)
   attention  'auto' | 'naive' | 'flash' | 'flash_pallas'
-             | 'flash_pallas_int' | 'flash_ring' | 'flash_decode'
+             | 'flash_pallas_int' | 'flash_pallas_int3'
+             | 'flash_ring' | 'flash_decode'
   activation 'gelu_exact' | ... (delegates to repro.core.activations)
   ffn        'auto' | 'dense' | 'fused_pallas'  (gated-MLP execution)
 
 Providers register themselves at import time (``models/attention.py``
 registers 'naive', ``models/flash.py`` registers 'flash' and the 'auto'
 rule, ``kernels/flash_attention.py`` registers 'flash_pallas',
-``kernels/flash_attention_int.py`` registers 'flash_pallas_int',
-``kernels/ring_attention.py`` registers 'flash_ring',
+``kernels/flash_attention_int.py`` registers 'flash_pallas_int' (the
+one-sweep snapped-max unit) and 'flash_pallas_int3' (the three-sweep
+pinned oracle), ``kernels/ring_attention.py`` registers 'flash_ring',
 ``kernels/fused_ffn.py`` registers 'fused_pallas') — the registry itself
 imports nothing from ``models``, which keeps the layering acyclic:
 datapath -> kernels -> dispatch -> models.
 
 Attention resolution is softmax-aware: ``softmax_impl='dualmode'`` can
-never be silently dropped.  'auto' + dualmode routes blocked shapes to
-the bit-accurate Pallas int kernel (decode rows — s_q=1 — back to
-'naive', the exact whole-row unit); an EXPLICIT float blocked impl
-('flash' / 'flash_pallas' / 'flash_ring' / 'flash_decode') + dualmode
-raises instead of quietly running the fp32 datapath.
+never be silently dropped.  The resolution table:
+
+  impl        + dualmode                    + float
+  ----------- ----------------------------- -------------------------
+  auto        short rows -> 'naive';        shape/backend/mesh rule
+              blocked -> 'flash_pallas_int' (flash / flash_pallas /
+              (one-sweep snapped unit);     flash_decode / flash_ring
+              s_q=1 long KV ->              / naive)
+              'flash_decode' (int split
+              path); ring opt-in ->
+              'flash_ring' (int hop fold)
+  flash /     ValueError (float log-domain  passes through
+  flash_pallas by construction)
+  flash_decode runs its int snapped split   runs the float split path
+  flash_ring   path (dual-mode capable)     runs the float hop fold
+  flash_pallas passes through               ValueError (the kernels
+  _int / _int3                              ARE the unit)
 
 Resolution is also shape- and backend-aware through the 'auto' rule
 (registered by ``models/flash.py``): s_q=1 against a long KV cache picks
-the split-KV decode kernel 'flash_decode'; wide-q blocked shapes pick
-the compiled Pallas kernel on TPU and the pure-JAX blocked path on
+the split-KV decode kernel 'flash_decode' (in BOTH softmax modes — the
+snapped monoid made the split fold word-exact); wide-q blocked shapes
+pick the compiled Pallas kernel on TPU and the pure-JAX blocked path on
 interpret backends (where interpret-mode Pallas loses to XLA).
 
 Resolution is also mesh-aware when the caller opts in with a
-``ring_axis``: when 'auto' would stream a float blocked path AND the
-ambient ``with mesh:`` context shards the KV sequence over that axis
-(both sequence dims divisible), the pick upgrades to 'flash_ring' — the
-sequence-parallel ring composition of the same kernel.
+``ring_axis``: when 'auto' lands on a blocked impl (float OR int) AND
+the ambient ``with mesh:`` context shards the KV sequence over that
+axis (both sequence dims divisible), the pick upgrades to 'flash_ring'
+— the sequence-parallel ring composition of the same kernel, which
+folds float (m, l, acc) or snapped int (m, S, acc) hop partials
+according to ``softmax_impl``.
 """
 from __future__ import annotations
 
@@ -60,9 +77,13 @@ def register_softmax(name: str, fn: Callable) -> None:
 def get_softmax(impl: str) -> Callable:
     """Attention-softmax implementation switch.
 
-    'float'    : jax.nn.softmax (fp32 accumulate)
-    'dualmode' : the paper's unit, bit-accurate int path (jnp emulation —
-                 same numerics the Pallas kernel executes)
+    'float'         : jax.nn.softmax (fp32 accumulate)
+    'dualmode'      : the paper's unit, bit-accurate int path (jnp
+                      emulation — same numerics the three-sweep Pallas
+                      kernel executes)
+    'dualmode_snap' : the snapped-max variant of the unit — the
+                      whole-row oracle of every STREAMED dual-mode path
+                      (one-sweep int flash, dual-mode decode/ring)
     """
     try:
         return _SOFTMAX[impl]
@@ -76,6 +97,10 @@ register_softmax(
     "dualmode",
     lambda x: _unit.softmax_dualmode(
         x.astype("float32"), axis=-1).astype(x.dtype))
+register_softmax(
+    "dualmode_snap",
+    lambda x: _unit.softmax_dualmode_snap(
+        x.astype("float32"), axis=-1).astype(x.dtype))
 
 
 # --------------------------------------------------------------------------
@@ -88,9 +113,14 @@ _ATTENTION_AUTO: list[Callable] = []   # single slot: (s_q, t) -> impl name
 
 # blocked impls that run the float log-domain datapath by construction —
 # resolution refuses to pair these with softmax_impl='dualmode' (the
-# bit-accurate words come from 'naive' or 'flash_pallas_int')
-FLOAT_BLOCKED_ATTENTION = frozenset(
-    {"flash", "flash_pallas", "flash_ring", "flash_decode"})
+# bit-accurate words come from 'naive', 'flash_pallas_int', or the
+# dual-mode-capable 'flash_decode'/'flash_ring' entries, which route to
+# their int snapped paths internally)
+FLOAT_BLOCKED_ATTENTION = frozenset({"flash", "flash_pallas"})
+
+# kernels that ARE the bit-accurate unit — they cannot produce float-path
+# words, so resolution refuses any softmax_impl but 'dualmode'
+INT_ATTENTION = frozenset({"flash_pallas_int", "flash_pallas_int3"})
 
 
 def ambient_mesh():
@@ -125,11 +155,13 @@ def register_attention(name: str, fn: Callable) -> None:
     Every implementation takes the full contract (``ring_axis`` names
     the mesh axis the sequence-parallel ring rotates over; only
     'flash_ring' acts on it, the others accept and ignore it).  'naive'
-    honors any ``softmax_impl``; the float blocked ones ('flash',
-    'flash_pallas', 'flash_ring') are the float log-domain form by
-    construction and are never resolved with 'dualmode' (see
-    :func:`resolve_attention`); 'flash_pallas_int' IS the dual-mode unit
-    streamed and requires 'dualmode'."""
+    honors any ``softmax_impl``; 'flash_decode' and 'flash_ring' are
+    dual-mode CAPABLE — their entries route to the float or the snapped
+    int path on ``softmax_impl``; the float blocked ones ('flash',
+    'flash_pallas') are the float log-domain form by construction and
+    are never resolved with 'dualmode' (see :func:`resolve_attention`);
+    'flash_pallas_int'/'flash_pallas_int3' ARE the dual-mode unit
+    streamed and require 'dualmode'."""
     _ATTENTION[name] = fn
 
 
@@ -158,50 +190,48 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
     guarantees the bit-accurate unit actually executes —
 
       * 'auto' + 'dualmode': short rows stay 'naive' (whole-row unit);
-        shapes the auto rule would stream go to 'flash_pallas_int'
-        (the unit's blocked three-sweep kernel), never a float path;
-        s_q=1 decode rows the rule would send to 'flash_decode' fall
-        back to 'naive' — the whole-row unit is exact there and the int
-        kernel's three sweeps buy nothing at one query row.
-      * explicit 'flash'/'flash_pallas'/'flash_ring' + 'dualmode':
-        ValueError — these run the float datapath by construction, and
-        silently dropping the unit is exactly the bug this guard exists
-        to prevent.  (auto + dualmode on a ring mesh therefore streams
-        through the single-device int kernel; a dual-mode ring is open.)
-      * explicit 'flash_pallas_int' + anything but 'dualmode': ValueError
-        (the kernel is the unit; it cannot produce float-path words).
+        shapes the auto rule would stream go to 'flash_pallas_int' (the
+        unit's one-sweep snapped-max kernel), never a float path; s_q=1
+        decode rows keep 'flash_decode' — its entry runs the snapped int
+        split path, so long-cache dual-mode decode gets the same split-KV
+        parallelism as float; the ring opt-in (below) upgrades to
+        'flash_ring', whose entry folds snapped int hop partials.
+      * explicit 'flash'/'flash_pallas' + 'dualmode': ValueError — these
+        run the float datapath by construction, and silently dropping
+        the unit is exactly the bug this guard exists to prevent.
+      * explicit 'flash_pallas_int'/'flash_pallas_int3' + anything but
+        'dualmode': ValueError (the kernels ARE the unit; they cannot
+        produce float-path words).
 
     Mesh-aware (opt-in): with a non-empty ``ring_axis``, an 'auto' pick
-    of a float blocked path upgrades to 'flash_ring' when the ambient
-    ``with mesh:`` context carries that axis with size > 1 and both
-    sequence dims divide it — the shapes where the KV sequence actually
-    shards.  Configs opt in via ``ModelConfig.ring_axis``; the default
-    (``""``) never changes today's resolution.
+    of a blocked path — float OR int — upgrades to 'flash_ring' when the
+    ambient ``with mesh:`` context carries that axis with size > 1 and
+    both sequence dims divide it — the shapes where the KV sequence
+    actually shards.  Configs opt in via ``ModelConfig.ring_axis``; the
+    default (``""``) never changes today's resolution.
     """
     if impl == "auto" and not _ATTENTION_AUTO:
         _load_attention_providers()
     if impl == "auto":
         impl = _ATTENTION_AUTO[0](s_q, t_kv) if _ATTENTION_AUTO else "naive"
-        if softmax_impl == "dualmode" and impl == "flash_decode":
-            # dualmode decode: s_q=1 rows run the whole-row unit exactly
-            # and cheaply — never the float split-KV path, and the int
-            # kernel's three sweeps buy nothing at one query row
-            impl = "naive"
-        elif softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
+        if softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
+            # blocked dual-mode: the one-sweep snapped-max unit kernel
             impl = "flash_pallas_int"
-        elif impl in ("flash", "flash_pallas"):
+        if impl in ("flash", "flash_pallas", "flash_pallas_int"):
             n = ring_axis_size(ring_axis)
             if n > 1 and s_q % n == 0 and t_kv % n == 0:
+                # the ring entry folds float (m, l, acc) or snapped int
+                # (m, S, acc) hop partials according to softmax_impl
                 impl = "flash_ring"
     elif softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
         raise ValueError(
             f"attn_impl={impl!r} runs the float log-domain datapath and "
             "cannot honor softmax_impl='dualmode' — use attn_impl='auto' "
-            "(routes to 'naive'/'flash_pallas_int'), 'naive', or "
-            "'flash_pallas_int'")
-    if impl == "flash_pallas_int" and softmax_impl != "dualmode":
+            "(routes to 'naive'/'flash_pallas_int'/'flash_decode'), "
+            "'naive', or 'flash_pallas_int'")
+    if impl in INT_ATTENTION and softmax_impl != "dualmode":
         raise ValueError(
-            "attn_impl='flash_pallas_int' is the bit-accurate dual-mode "
+            f"attn_impl={impl!r} is the bit-accurate dual-mode "
             f"unit; softmax_impl={softmax_impl!r} would be ignored — set "
             "softmax_impl='dualmode' (or pick a float attention impl)")
     if impl not in _ATTENTION:

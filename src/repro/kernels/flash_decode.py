@@ -35,6 +35,18 @@ keys take ``datapath.MASK_VALUE``, tiling phantoms take ``-inf`` — so
 decode can never disagree with the other implementations on which keys
 are "off".  Forward-only: decode never differentiates.  Runs on CPU with
 ``interpret=True`` (the default off-TPU).
+
+DUAL-MODE decode (``softmax_impl='dualmode'``): the same split-KV grid
+runs the snapped-max INT recurrence instead — score words via
+``flash_attention_int.int_score_words``, per-tile state update via
+``flash_attention_int.snap_tile_update``, and the per-split partial is
+the int monoid state ``(m snapped, S buckets, acc)`` folded host-side by
+:func:`repro.core.softmax_unit.online_merge_n_int` (the int twin of
+``online_softmax_merge_n``).  The causal tile skip carries over: for the
+int unit a skipped tile's keys sit >= 16 octaves below any live max, so
+they contribute zero words to the normalizer l; only their ~2**-40 f32
+numerator mass is dropped (the same order of approximation as the float
+path's exp(MASK_VALUE) drop).
 """
 from __future__ import annotations
 
@@ -45,9 +57,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import softmax_unit as unit
+
 from . import datapath as dp
 from . import dispatch, tiling
 from .flash_attention import masked_score_block
+from .flash_attention_int import int_score_words, snap_tile_update
 
 
 def _decode_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, om_ref, ol_ref,
@@ -167,6 +182,121 @@ def _flash_decode_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
     return dp.online_softmax_finish(l, acc).astype(v.dtype)  # (B,1,K,G,hv)
 
 
+def _decode_body_int(qpos_ref, valid_ref, q_ref, k_ref, v_ref, om_ref,
+                     os_ref, oacc_ref, m_ref, s_ref, acc_ref, *,
+                     block_kv: int, inner: int, causal: bool, t_kv: int,
+                     guard_shift: int):
+    """Dual-mode twin of ``_decode_body``: same grid, same tile skip, but
+    the per-split partial is the snapped int monoid state (m, S, acc)."""
+    sp = pl.program_id(2)
+    kj = pl.program_id(3)
+    g = q_ref.shape[-2]
+    hv = oacc_ref.shape[-1]
+    nb = unit.N_SNAP_BUCKETS
+    kv_tile = sp * inner + kj
+
+    @pl.when(kj == 0)
+    def _():
+        # empty-split sentinel (SNAP_MIN, 0, 0) — the int merge identity
+        m_ref[...] = jnp.full_like(m_ref, unit.SNAP_MIN)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def update():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32)       # (G, h) pre-scaled
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)         # (bkv, h)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)         # (bkv, hv)
+        sq = int_score_words(q, kb, qpos_ref, valid_ref, kv_tile,
+                             block_kv=block_kv, causal=causal, t_kv=t_kv)
+        m_new, S_new, acc_new = snap_tile_update(
+            m_ref[:g, :1], s_ref[:g, :nb], acc_ref[:g, :hv], sq, vb,
+            guard_shift)
+        m_ref[:g, :1] = m_new
+        s_ref[:g, :nb] = S_new
+        acc_ref[:g, :hv] = acc_new
+
+    if causal:
+        pl.when(kv_tile * block_kv <= qpos_ref[0, 0])(update)
+    else:
+        update()
+
+    @pl.when(kj == inner - 1)
+    def _():
+        om_ref[0, 0, 0, :] = m_ref[:g, 0]
+        os_ref[0, 0, 0, :, :] = s_ref[:g, :nb]
+        oacc_ref[0, 0, 0, :, :] = acc_ref[:g, :hv]
+
+
+def _finish_decode_int(part_m, part_S, part_acc, out_dtype):
+    """Host-side split fold + normalize for dual-mode decode: the int
+    n-way merge (axis 1 = splits, keepdims makes it the s_q=1 dim), then
+    one f32 division by the bucket-telescoped l word."""
+    _, S, acc = unit.online_merge_n_int(
+        part_m[..., None], part_S, part_acc, axis=1)
+    l = unit.online_finish_int(S)                          # (B, 1, K, G)
+    return (acc / l[..., None].astype(jnp.float32)).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "num_splits", "block_kv", "interpret", "guard_shift"))
+def _flash_decode_int_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
+                          num_splits: int, block_kv: int, interpret: bool,
+                          guard_shift: int):
+    b, s_q, kh, g, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]
+    nb = unit.N_SNAP_BUCKETS
+    qf = q.astype(jnp.float32) * scale
+
+    bkv = block_kv
+    inner = tiling.cdiv(tiling.cdiv(t, bkv), num_splits)
+    t_pad = num_splits * inner * bkv
+    kf, _ = tiling.pad_dim(k, 1, t_pad)
+    vf, _ = tiling.pad_dim(v, 1, t_pad)
+    valid, _ = tiling.pad_dim(kv_valid.astype(jnp.int32), 1, t_pad, value=0)
+    qp = q_pos.astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda b_, h_, sp, kj: (b_, 0)),
+        pl.BlockSpec((1, bkv),
+                     lambda b_, h_, sp, kj: (b_, sp * inner + kj)),
+        pl.BlockSpec((1, 1, 1, g, hd), lambda b_, h_, sp, kj: (b_, 0, h_,
+                                                               0, 0)),
+        pl.BlockSpec((1, bkv, 1, hd),
+                     lambda b_, h_, sp, kj: (b_, sp * inner + kj, h_, 0)),
+        pl.BlockSpec((1, bkv, 1, hv),
+                     lambda b_, h_, sp, kj: (b_, sp * inner + kj, h_, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, g), lambda b_, h_, sp, kj: (b_, sp, h_, 0)),
+        pl.BlockSpec((1, 1, 1, g, nb),
+                     lambda b_, h_, sp, kj: (b_, sp, h_, 0, 0)),
+        pl.BlockSpec((1, 1, 1, g, hv),
+                     lambda b_, h_, sp, kj: (b_, sp, h_, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, num_splits, kh, g), jnp.int32),
+        jax.ShapeDtypeStruct((b, num_splits, kh, g, nb), jnp.int32),
+        jax.ShapeDtypeStruct((b, num_splits, kh, g, hv), jnp.float32),
+    ]
+    rows = tiling.round_up(g, tiling.SUBLANE)
+    part_m, part_S, part_acc = pl.pallas_call(
+        functools.partial(_decode_body_int, block_kv=bkv, inner=inner,
+                          causal=causal, t_kv=t, guard_shift=guard_shift),
+        grid=(b, kh, num_splits, inner),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((rows, tiling.scratch_lanes(1)), jnp.int32),   # m
+            pltpu.VMEM((rows, tiling.scratch_lanes(nb)), jnp.int32),  # S
+            pltpu.VMEM((rows, tiling.scratch_lanes(hv)), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, valid, qf, kf, vf)
+    return _finish_decode_int(part_m, part_S, part_acc, v.dtype)
+
+
 def _paged_decode_body(tab_ref, *refs, **kw):
     """Block-table wrapper: the scalar-prefetched table ref arrives first
     and is consumed entirely by the BlockSpec index maps — the body
@@ -249,10 +379,83 @@ def _flash_decode_paged_jit(q, k_pool, v_pool, tables, q_pos, kv_valid,
     return dp.online_softmax_finish(l, acc).astype(v_pool.dtype)
 
 
+def _paged_decode_body_int(tab_ref, *refs, **kw):
+    """Paged dual-mode: the table is again pure BlockSpec routing — the
+    arithmetic is byte-for-byte the contiguous int decode body."""
+    del tab_ref
+    _decode_body_int(*refs, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "num_splits", "interpret", "guard_shift"))
+def _flash_decode_paged_int_jit(q, k_pool, v_pool, tables, q_pos, kv_valid,
+                                scale, *, causal: bool, num_splits: int,
+                                interpret: bool, guard_shift: int):
+    b, s_q, kh, g, hd = q.shape
+    bs = k_pool.shape[1]
+    hv = v_pool.shape[-1]
+    nblk = tables.shape[1]
+    t = nblk * bs
+    nb = unit.N_SNAP_BUCKETS
+    qf = q.astype(jnp.float32) * scale
+
+    inner = tiling.cdiv(nblk, num_splits)
+    tab, _ = tiling.pad_dim(tables.astype(jnp.int32), 1,
+                            num_splits * inner, value=0)
+    valid, _ = tiling.pad_dim(kv_valid.astype(jnp.int32), 1,
+                              num_splits * inner * bs, value=0)
+    qp = q_pos.astype(jnp.int32)
+
+    rows = tiling.round_up(g, tiling.SUBLANE)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, num_splits, inner),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, sp, kj, tab_: (b_, 0)),
+            pl.BlockSpec((1, bs),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp * inner + kj)),
+            pl.BlockSpec((1, 1, 1, g, hd),
+                         lambda b_, h_, sp, kj, tab_: (b_, 0, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, h_, sp, kj, tab_:
+                         (tab_[b_, sp * inner + kj], 0, h_, 0)),
+            pl.BlockSpec((1, bs, 1, hv),
+                         lambda b_, h_, sp, kj, tab_:
+                         (tab_[b_, sp * inner + kj], 0, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp, h_, 0)),
+            pl.BlockSpec((1, 1, 1, g, nb),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp, h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, hv),
+                         lambda b_, h_, sp, kj, tab_: (b_, sp, h_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, tiling.scratch_lanes(1)), jnp.int32),   # m
+            pltpu.VMEM((rows, tiling.scratch_lanes(nb)), jnp.int32),  # S
+            pltpu.VMEM((rows, tiling.scratch_lanes(hv)), jnp.float32),
+        ],
+    )
+    part_m, part_S, part_acc = pl.pallas_call(
+        functools.partial(_paged_decode_body_int, block_kv=bs, inner=inner,
+                          causal=causal, t_kv=t, guard_shift=guard_shift),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, num_splits, kh, g), jnp.int32),
+            jax.ShapeDtypeStruct((b, num_splits, kh, g, nb), jnp.int32),
+            jax.ShapeDtypeStruct((b, num_splits, kh, g, hv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tab, qp, valid, qf, k_pool, v_pool)
+    return _finish_decode_int(part_m, part_S, part_acc, v_pool.dtype)
+
+
 def flash_decode_paged(q, k_pool, v_pool, *, block_tables, q_pos, kv_valid,
                        causal: bool = True, scale: float | None = None,
                        num_splits: int | None = None,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       softmax_impl: str = "float"):
     """Block-table flash decode: KV gathered through a paged pool.
 
     ``k_pool``/``v_pool`` are (N_blocks, block_size, K, h|hv) pools and
@@ -264,6 +467,9 @@ def flash_decode_paged(q, k_pool, v_pool, *, block_tables, q_pos, kv_valid,
     the gather — masking, the per-row causal tile skip, the
     ``online_softmax_merge_n`` fold — is byte-for-byte the contiguous
     kernel's code path, so the split/parity contracts carry over.
+
+    ``softmax_impl='dualmode'`` runs the snapped-max INT recurrence on the
+    same paged grid (see module docstring).
     """
     if q.shape[1] != 1:
         raise ValueError(
@@ -280,6 +486,17 @@ def flash_decode_paged(q, k_pool, v_pool, *, block_tables, q_pos, kv_valid,
     if num_splits is None:
         num_splits = min(tiling.decode_splits(nblk * bs), nblk)
     num_splits = max(1, min(num_splits, nblk))
+    if softmax_impl == "dualmode":
+        # guard from the LOGICAL cache extent, as the whole-row unit would
+        guard_shift = max(0, (nblk * bs).bit_length() - 16)
+        return _flash_decode_paged_int_jit(
+            q, k_pool, v_pool, block_tables, q_pos, kv_valid,
+            jnp.float32(scale), causal=causal, num_splits=num_splits,
+            interpret=interpret, guard_shift=guard_shift)
+    if softmax_impl != "float":
+        raise ValueError(
+            f"flash_decode_paged softmax_impl={softmax_impl!r}: expected "
+            "'float' or 'dualmode'")
     return _flash_decode_paged_jit(q, k_pool, v_pool, block_tables, q_pos,
                                    kv_valid, jnp.float32(scale),
                                    causal=causal, num_splits=num_splits,
@@ -290,14 +507,17 @@ def flash_decode_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
                         scale: float | None = None,
                         num_splits: int | None = None,
                         block_kv: int | None = None,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        softmax_impl: str = "float"):
     """Split-KV flash decode; see module docstring for shapes/masking.
 
     ``num_splits=None`` picks the :func:`repro.kernels.tiling.
     decode_splits` heuristic (cache length / core count, 1 at short
     caches).  The output is invariant to the split count — WHERE the
     cache is split only changes which partial each key lands in, and the
-    merge is the associative monoid fold.
+    merge is the associative monoid fold.  ``softmax_impl='dualmode'``
+    swaps in the snapped-max INT recurrence (same grid, int partials,
+    :func:`repro.core.softmax_unit.online_merge_n_int` fold).
     """
     if q.shape[1] != 1:
         raise ValueError(
@@ -311,6 +531,16 @@ def flash_decode_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
         num_splits = tiling.decode_splits(t)
     if block_kv is None:
         block_kv = tiling.decode_kv_block(t, num_splits)
+    if softmax_impl == "dualmode":
+        guard_shift = max(0, t.bit_length() - 16)
+        return _flash_decode_int_jit(
+            q, k, v, q_pos, kv_valid, jnp.float32(scale), causal=causal,
+            num_splits=num_splits, block_kv=block_kv, interpret=interpret,
+            guard_shift=guard_shift)
+    if softmax_impl != "float":
+        raise ValueError(
+            f"flash_decode_pallas softmax_impl={softmax_impl!r}: expected "
+            "'float' or 'dualmode'")
     return _flash_decode_jit(q, k, v, q_pos, kv_valid, jnp.float32(scale),
                              causal=causal, num_splits=num_splits,
                              block_kv=block_kv, interpret=interpret)
@@ -318,26 +548,19 @@ def flash_decode_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float", ring_axis=""):
-    if softmax_impl == "dualmode":
-        raise ValueError(
-            "attn_impl='flash_decode' runs the float log-domain datapath "
-            "and cannot honor softmax_impl='dualmode' — decode rows are "
-            "s_q=1, use 'naive' (the whole-row unit is exact there)")
+    impl = "dualmode" if softmax_impl == "dualmode" else "float"
     return flash_decode_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
-                               causal=causal, scale=scale)
+                               causal=causal, scale=scale,
+                               softmax_impl=impl)
 
 
 def _paged_attention_entry(q, k_pool, v_pool, *, block_tables, q_pos,
                            kv_valid, causal, scale, softmax_impl="float",
                            ring_axis=""):
-    if softmax_impl == "dualmode":
-        raise ValueError(
-            "attn_impl='flash_decode' runs the float log-domain datapath "
-            "and cannot honor softmax_impl='dualmode' — decode rows are "
-            "s_q=1, use 'naive' (the whole-row unit is exact there)")
+    impl = "dualmode" if softmax_impl == "dualmode" else "float"
     return flash_decode_paged(q, k_pool, v_pool, block_tables=block_tables,
                               q_pos=q_pos, kv_valid=kv_valid, causal=causal,
-                              scale=scale)
+                              scale=scale, softmax_impl=impl)
 
 
 dispatch.register_attention("flash_decode", _attention_entry)

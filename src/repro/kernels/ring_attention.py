@@ -38,6 +38,16 @@ Shapes match every other flash flavor (GQA/MLA compatible):
 with S and T both divisible by the ring axis size.  Runs on CPU under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` with
 ``interpret=True`` (the default off-TPU) — the multi-device CI lane.
+
+DUAL-MODE ring (``softmax_impl='dualmode'``, forward-only): the snapped
+int monoid of :mod:`repro.core.softmax_unit` is a partial contract
+exactly like ``(m, l, o*l)``, so each hop runs the one-sweep int kernel
+(``flash_attention_pallas_int(..., return_partial=True)``) and folds the
+``(m snapped, S buckets, acc)`` hop partial with
+:func:`repro.core.softmax_unit.online_merge_int`.  The guard shift is
+fixed from the GLOBAL key count before sharding, so every shard's words
+are the whole-row unit's words and the fold is word-exact regardless of
+ring size or hop order.
 """
 from __future__ import annotations
 
@@ -47,12 +57,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import softmax_unit as unit
 from repro.distributed.pipeline import shard_map_compat
 
 from . import datapath as dp
 from . import dispatch, tiling
 from .flash_attention import flash_attention_pallas
 from .flash_attention_bwd import flash_attention_bwd_pallas
+from .flash_attention_int import flash_attention_pallas_int
 
 
 def _stats_to_rows(x):
@@ -121,6 +133,55 @@ def _ring_fwd_local(qf, k, v, q_pos, kv_valid, *, axis, n_shards, t_loc,
                                               length=n_shards)
     out = dp.online_softmax_finish(l, acc).astype(v.dtype)
     return out, _rows_to_stats(m), _rows_to_stats(l)
+
+
+def _ring_fwd_local_int(qf, k, v, q_pos, kv_valid, *, axis, n_shards,
+                        t_loc, causal, block_q, block_kv, interpret,
+                        skip_hops, guard_shift):
+    """Dual-mode twin of ``_ring_fwd_local``: the hop partial is the
+    snapped int monoid state, folded with ``online_merge_int``.  The
+    caller fixes ``guard_shift`` from the GLOBAL key count so hop words
+    match the whole-row unit's.  Forward-only."""
+    b, s_loc, kh, g, _ = qf.shape
+    hv = v.shape[-1]
+    nb = unit.N_SNAP_BUCKETS
+    off0 = (jax.lax.axis_index(axis) * t_loc).astype(jnp.int32)[None]
+    qpos_max = jnp.max(q_pos)
+    perm = _ring_perm(n_shards)
+
+    m0 = jnp.full((b, s_loc, kh, g, 1), unit.SNAP_MIN, jnp.int32)
+    S0 = jnp.zeros((b, s_loc, kh, g, nb), jnp.int32)
+    acc0 = jnp.zeros((b, s_loc, kh, g, hv), jnp.float32)
+
+    def hop(carry, _):
+        k_c, v_c, valid_c, off_c, m, S, acc = carry
+
+        def run(m_, S_, acc_):
+            acc_h, m_h, S_h = flash_attention_pallas_int(
+                qf, k_c, v_c, q_pos=q_pos - off_c[0], kv_valid=valid_c,
+                causal=causal, scale=1.0, block_q=block_q,
+                block_kv=block_kv, interpret=interpret,
+                guard_shift=guard_shift, return_partial=True)
+            # stats (B,K,G,S[,nb]) -> merge rows (B,S,K,G,[1|nb])
+            m_h = _stats_to_rows(m_h)
+            S_h = jnp.moveaxis(S_h, 3, 1)
+            return unit.online_merge_int((m_, S_, acc_), (m_h, S_h, acc_h))
+
+        if skip_hops and causal:
+            m, S, acc = jax.lax.cond(
+                off_c[0] <= qpos_max, run,
+                lambda m_, S_, acc_: (m_, S_, acc_), m, S, acc)
+        else:
+            m, S, acc = run(m, S, acc)
+        k_c, v_c, valid_c, off_c = _rotate((k_c, v_c, valid_c, off_c),
+                                           axis, perm)
+        return (k_c, v_c, valid_c, off_c, m, S, acc), None
+
+    carry0 = (k, v, kv_valid, off0, m0, S0, acc0)
+    (_, _, _, _, m, S, acc), _ = jax.lax.scan(hop, carry0, None,
+                                              length=n_shards)
+    l = unit.online_finish_int(S)                      # (B, S_loc, K, G)
+    return (acc / l[..., None].astype(jnp.float32)).astype(v.dtype)
 
 
 def _ring_bwd_local(qf, k, v, o, m, l, do, q_pos, kv_valid, *, axis,
@@ -202,7 +263,8 @@ def ring_flash_attention(q, k, v, *, q_pos, kv_valid, mesh=None,
                          block_kv: int | None = None,
                          interpret: bool | None = None,
                          skip_masked_hops: bool = True,
-                         return_stats: bool = False):
+                         return_stats: bool = False,
+                         softmax_impl: str = "float"):
     """Sequence-parallel ring flash attention (see module docstring).
 
     Takes GLOBAL arrays and wraps the per-shard ring loop in a
@@ -218,6 +280,11 @@ def ring_flash_attention(q, k, v, *, q_pos, kv_valid, mesh=None,
     merge against.  ``skip_masked_hops=False`` forces every hop to run
     (the skipped hops' only contribution is the exp(MASK_VALUE) mass of
     fully-masked keys, ~1e-13 relative).
+
+    ``softmax_impl='dualmode'`` runs the snapped int monoid per hop (see
+    module docstring) — forward-only, and ``return_stats`` is not
+    supported there (the int partial is (m, S-buckets, acc), a different
+    residual contract).
     """
     if mesh is None:
         mesh = dispatch.ambient_mesh()
@@ -243,10 +310,27 @@ def ring_flash_attention(q, k, v, *, q_pos, kv_valid, mesh=None,
     # through the multiply and the ring loops stay scale-free, exactly
     # like the single-device kernel
     qf = q.astype(jnp.float32) * jnp.float32(scale)
-    local = functools.partial(
-        _ring_local, axis=axis, n_shards=n, t_loc=t // n, causal=causal,
-        block_q=bq, block_kv=bkv, interpret=interpret,
-        skip_hops=skip_masked_hops, return_stats=return_stats)
+    if softmax_impl == "dualmode":
+        if return_stats:
+            raise ValueError(
+                "ring_flash_attention: return_stats is a float (m, l) "
+                "residual contract; the dualmode ring folds (m, S, acc) "
+                "int partials and does not expose them")
+        # the whole-row guard, from the key count BEFORE sharding
+        local = functools.partial(
+            _ring_fwd_local_int, axis=axis, n_shards=n, t_loc=t // n,
+            causal=causal, block_q=bq, block_kv=bkv, interpret=interpret,
+            skip_hops=skip_masked_hops,
+            guard_shift=max(0, t.bit_length() - 16))
+    elif softmax_impl == "float":
+        local = functools.partial(
+            _ring_local, axis=axis, n_shards=n, t_loc=t // n, causal=causal,
+            block_q=bq, block_kv=bkv, interpret=interpret,
+            skip_hops=skip_masked_hops, return_stats=return_stats)
+    else:
+        raise ValueError(
+            f"ring_flash_attention softmax_impl={softmax_impl!r}: expected "
+            "'float' or 'dualmode'")
 
     def seq(nd: int, d: int = 1) -> P:
         return P(*[axis if i == d else None for i in range(nd)])
@@ -260,14 +344,11 @@ def ring_flash_attention(q, k, v, *, q_pos, kv_valid, mesh=None,
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float", ring_axis="model"):
-    if softmax_impl == "dualmode":
-        raise ValueError(
-            "attn_impl='flash_ring' runs the float log-domain datapath "
-            "and cannot honor softmax_impl='dualmode' — use 'naive' or "
-            "'flash_pallas_int'")
+    impl = "dualmode" if softmax_impl == "dualmode" else "float"
     return ring_flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
                                 causal=causal, scale=scale,
-                                axis=ring_axis or "model")
+                                axis=ring_axis or "model",
+                                softmax_impl=impl)
 
 
 dispatch.register_attention("flash_ring", _attention_entry)

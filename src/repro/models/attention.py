@@ -105,10 +105,11 @@ def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,
     Pallas kernel with attn_impl='flash_pallas') — same log-domain
     arithmetic as the paper's unit, in streaming form.  Resolution is
     softmax-aware: softmax_impl='dualmode' runs the bit-accurate unit
-    whole-row on the naive path (short T: decode steps, encoder blocks)
-    and through the blocked three-sweep int kernel
-    (attn_impl='flash_pallas_int') when streamed — it is never silently
-    dropped to the float datapath.
+    whole-row on the naive path (short T: encoder blocks), through the
+    snapped one-sweep int kernel (attn_impl='flash_pallas_int') when
+    streamed, the int split-KV path inside 'flash_decode' at decode
+    shapes, and the int monoid ring under a mesh — it is never silently
+    dropped to the float datapath on ANY phase.
     """
     s_q, t = q.shape[1], k.shape[1]
     impl = dispatch.resolve_attention(attn_impl, s_q, t,

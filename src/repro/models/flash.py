@@ -14,9 +14,10 @@ The inner step is therefore ``repro.kernels.datapath.
 online_softmax_update`` — the unit's own arithmetic, streamed, and the
 SAME function the Pallas kernel body executes (kernels/flash_attention.py
 is this loop with a Pallas grid around it).  (This module is the FLOAT
-form; the bit-accurate int unit streams through the three-sweep kernel
-in kernels/flash_attention_int.py — dispatch never pairs 'dualmode' with
-this float path.)
+form; the bit-accurate int unit streams through the snapped one-sweep
+kernel in kernels/flash_attention_int.py, with the three-sweep
+'flash_pallas_int3' kept as its oracle — dispatch never pairs 'dualmode'
+with this float path.)
 
 Shapes: q (B,S,K,G,h), k (B,T,K,h), v (B,T,K,hv) -> out (B,S,K,G,hv).
 hv may differ from h (MLA).  Masking: kv position t attends iff

@@ -187,6 +187,8 @@ class ServeEngine:
                  prefill_buckets: tuple[int, ...] = (32, 128, 512),
                  prefill_attn_impl: str | None = None,
                  decode_attn_impl: str | None = None,
+                 prefill_softmax_impl: str | None = None,
+                 decode_softmax_impl: str | None = None,
                  mesh=None, seed: int = 0,
                  cache_mode: str = "auto",
                  block_size: int | None = None,
@@ -199,8 +201,8 @@ class ServeEngine:
         # optional device mesh: per-phase resolution AND the compiled
         # programs trace under `with mesh:`, so a cfg with ring_axis set
         # resolves long-context prefill to the sequence-parallel ring
-        # path (decode stays s_q=1 -> naive) and the flash_ring provider
-        # finds the same mesh ambient at trace time
+        # path (decode stays s_q=1 -> naive/flash_decode) and the
+        # flash_ring provider finds the same mesh ambient at trace time
         self.mesh = mesh
         if cache_mode not in ("auto", "paged", "contiguous"):
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
@@ -251,8 +253,16 @@ class ServeEngine:
         # cfg.attn_impl, so a config that pins a concrete impl keeps it
         # for both phases; resolution is softmax-aware, so a dualmode
         # config routes to the bit-accurate paths instead of silently
-        # running the float ones (dualmode decode stays naive: the unit
-        # is whole-row exact at s_q=1).
+        # running the float ones (snapped one-sweep kernel on blocked
+        # prefill, the int split-KV path inside flash_decode at decode —
+        # the unit no longer forces a whole-row naive fallback anywhere).
+        # The softmax impl is ALSO per-phase overridable: float prefill +
+        # dualmode decode is a real serving mix (prompt ingestion at
+        # float speed, generated words bit-accurate), and each phase's
+        # resolution must see the softmax it will actually compile with.
+        self.prefill_softmax_impl = (prefill_softmax_impl
+                                     or cfg.softmax_impl)
+        self.decode_softmax_impl = decode_softmax_impl or cfg.softmax_impl
         if self.cache_mode == "paged":
             prefill_sq = self.prefill_chunk
             t_kv = self.max_blocks * self.block_size
@@ -274,21 +284,21 @@ class ServeEngine:
                        and all(b % n == 0 for b in self.buckets))
             self.prefill_attn_impl = dispatch.resolve_attention(
                 prefill_attn_impl or cfg.attn_impl, prefill_sq, t_kv,
-                softmax_impl=cfg.softmax_impl,
+                softmax_impl=self.prefill_softmax_impl,
                 ring_axis=cfg.ring_axis if ring_ok else "")
             self.decode_attn_impl = dispatch.resolve_attention(
                 decode_attn_impl or cfg.attn_impl, 1, t_kv,
-                softmax_impl=cfg.softmax_impl)
+                softmax_impl=self.decode_softmax_impl)
+        prefill_cfg = cfg.replace(attn_impl=self.prefill_attn_impl,
+                                  softmax_impl=self.prefill_softmax_impl)
+        decode_cfg = cfg.replace(attn_impl=self.decode_attn_impl,
+                                 softmax_impl=self.decode_softmax_impl)
         if self.cache_mode == "paged":
-            self._prefill = jax.jit(make_chunk_prefill_step(
-                cfg.replace(attn_impl=self.prefill_attn_impl)))
-            self._decode = jax.jit(make_paged_decode_step(
-                cfg.replace(attn_impl=self.decode_attn_impl)))
+            self._prefill = jax.jit(make_chunk_prefill_step(prefill_cfg))
+            self._decode = jax.jit(make_paged_decode_step(decode_cfg))
         else:
-            self._prefill = jax.jit(make_prefill_step(
-                cfg.replace(attn_impl=self.prefill_attn_impl)))
-            self._decode = jax.jit(make_decode_step(
-                cfg.replace(attn_impl=self.decode_attn_impl)))
+            self._prefill = jax.jit(make_prefill_step(prefill_cfg))
+            self._decode = jax.jit(make_decode_step(decode_cfg))
         self._slots = [_Slot() for _ in range(n_slots)]
         self._admit_seq = 0
         self._queue: list[Request] = []

@@ -1,11 +1,12 @@
-"""Split-KV flash-decode kernel + serve-engine decode fast path (ISSUE 5).
+"""Split-KV flash-decode kernel + serve-engine decode fast path (ISSUE 5,
+dual-mode decode ISSUE 7).
 
 Covers what the parity matrix doesn't: the split-count heuristic, the
-dispatch guards (s_q=1 only, dualmode refusal, 'auto' resolution at
-decode shapes), the ragged per-slot tile skip, and the engine-level
-contract — a long-cache ServeEngine resolves its decode program through
-``flash_decode`` (jaxpr-proved) while short caches and dualmode stay on
-whole-row naive.
+dispatch guards (s_q=1 only, 'auto' resolution at decode shapes), the
+ragged per-slot tile skip, the dual-mode int split path, and the
+engine-level contract — a long-cache ServeEngine resolves its decode
+program through ``flash_decode`` (jaxpr-proved) for BOTH float and
+dualmode configs, while short caches stay on whole-row naive.
 """
 import jax
 import jax.numpy as jnp
@@ -113,10 +114,10 @@ def test_auto_resolution_decode_shapes():
     assert dispatch.resolve_attention("auto", 1, 65536) == "flash_decode"
     # short cache: whole-row naive stays
     assert dispatch.resolve_attention("auto", 1, 256) == "naive"
-    # dualmode decode: the unit runs whole-row exact — never the float
-    # split-KV path, never the int blocked kernel
+    # dualmode decode: flash_decode routes to the int split path inside
+    # the entry — the unit streams split-KV instead of whole-row naive
     assert dispatch.resolve_attention(
-        "auto", 1, 65536, softmax_impl="dualmode") == "naive"
+        "auto", 1, 65536, softmax_impl="dualmode") == "flash_decode"
     # wide-q shapes never pick the decode kernel
     assert dispatch.resolve_attention("auto", 2, 65536) != "flash_decode"
 
@@ -134,18 +135,43 @@ def test_auto_decode_pick_is_mesh_gated():
     assert dispatch.resolve_attention("auto", 1, 65536) == "flash_decode"
 
 
-def test_explicit_flash_decode_dualmode_raises():
-    with pytest.raises(ValueError, match="dualmode"):
-        dispatch.resolve_attention("flash_decode", 1, 4096,
-                                   softmax_impl="dualmode")
+def test_explicit_flash_decode_dualmode_resolves_and_runs():
+    """ISSUE 7: dualmode + flash_decode is a supported pairing — it
+    resolves, and the entry runs the snapped int split path whose output
+    matches the naive whole-row SNAPPED unit (word-identical recurrence,
+    f32 numerator@v order the only slack)."""
+    assert dispatch.resolve_attention(
+        "flash_decode", 1, 4096, softmax_impl="dualmode") == "flash_decode"
+    b, t = 2, 512
+    q, k, v = _mk(b, t, 2, 2, 16)
+    q_pos = jnp.asarray([[100], [511]], jnp.int32)
+    kv_valid = jnp.arange(t)[None, :] <= q_pos
     entry = dispatch.get_attention("flash_decode")
-    q = jnp.zeros((1, 1, 1, 1, 8), jnp.float32)
-    k = jnp.zeros((1, 16, 1, 8), jnp.float32)
-    v = jnp.zeros((1, 16, 1, 8), jnp.float32)
-    with pytest.raises(ValueError, match="dualmode"):
-        entry(q, k, v, q_pos=jnp.zeros((1, 1), jnp.int32),
-              kv_valid=jnp.ones((1, 16), bool), causal=True, scale=None,
-              softmax_impl="dualmode")
+    got = entry(q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=True,
+                scale=None, softmax_impl="dualmode")
+    want = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                       softmax_impl="dualmode_snap")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # and vs the CLASSIC whole-row unit: the max-quantization bound
+    want_c = _naive_sdpa(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                         softmax_impl="dualmode")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_c),
+                               atol=2e-3)
+
+
+def test_dualmode_decode_split_invariance():
+    """The int monoid fold: WHERE the cache splits cannot change words."""
+    b, t = 2, 1024
+    q, k, v = _mk(b, t, 2, 2, 16)
+    q_pos = jnp.asarray([[40], [1000]], jnp.int32)
+    kv_valid = jnp.arange(t)[None, :] <= q_pos
+    ref = flash_decode_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                              num_splits=1, softmax_impl="dualmode")
+    for ns in (2, 4, 8):
+        got = flash_decode_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
+                                  num_splits=ns, softmax_impl="dualmode")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-6, err_msg=f"n_splits={ns}")
 
 
 # ---------------- serve engine fast path ----------------
@@ -173,11 +199,12 @@ def test_engine_decode_resolves_flash_decode_at_long_kv():
         cfg.replace(attn_impl=short.decode_attn_impl)))(
         params, short.caches, toks, pos)
     assert "pallas_call" not in str(jaxpr_s)
-    # dualmode engine decode stays on the whole-row unit
+    # dualmode engine decode takes the split-KV fast path too (ISSUE 7:
+    # the int monoid made flash_decode softmax-aware)
     dual = ServeEngine(cfg.replace(softmax_impl="dualmode"), params,
                       n_slots=2, max_seq=2048, prefill_buckets=(8,),
                       cache_mode="contiguous")
-    assert dual.decode_attn_impl == "naive"
+    assert dual.decode_attn_impl == "flash_decode"
 
 
 def test_engine_decode_step_logits_match_naive():

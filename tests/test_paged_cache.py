@@ -242,12 +242,20 @@ def test_paged_registry_entry():
     fn = dispatch.get_paged_attention("flash_decode")
     assert fn is not None
     assert dispatch.get_paged_attention("naive") is None
+    # dualmode on the paged entry runs the snapped int split path (ISSUE 7)
+    # and matches the dense dual-mode decode on the gathered cache exactly:
+    # same words, same split fold, block tables only change the addressing
     q, k_pool, v_pool, tables, q_pos, kv_valid = _mk_paged_case(
         4, b=1, kh=2, g=2, hd=16, hv=16, nblk=2, bs=16)
-    with pytest.raises(ValueError, match="dualmode"):
-        fn(q, k_pool, v_pool, block_tables=tables, q_pos=q_pos,
-           kv_valid=kv_valid, causal=True, scale=None,
-           softmax_impl="dualmode")
+    got = fn(q, k_pool, v_pool, block_tables=tables, q_pos=q_pos,
+             kv_valid=kv_valid, causal=True, scale=None,
+             softmax_impl="dualmode")
+    dense = flash_decode_pallas(q, paged_gather(k_pool, tables),
+                                paged_gather(v_pool, tables), q_pos=q_pos,
+                                kv_valid=kv_valid, interpret=True,
+                                softmax_impl="dualmode")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               atol=1e-6)
 
 
 # ---------------- engine fast path (paged) ----------------

@@ -158,20 +158,42 @@ def test_resolve_ring_upgrade_is_mesh_and_knob_gated():
         # non-divisible sequence dims stay on the single-device pick
         assert dispatch.resolve_attention(
             "auto", 4097, 4099, ring_axis="model") == "flash"
-        # dualmode is a numerics contract: it outranks the ring and
-        # streams through the bit-accurate int kernel
+        # dualmode is a numerics contract the ring now honors (ISSUE 7):
+        # blocked dualmode streams the snapped int kernel, and the ring
+        # upgrade applies on top of it exactly like the float path
         assert dispatch.resolve_attention(
             "auto", 4096, 4096, softmax_impl="dualmode",
-            ring_axis="model") == "flash_pallas_int"
+            ring_axis="model") == (
+                "flash_ring" if n > 1 else "flash_pallas_int")
         # short rows never stream, ring or not
         assert dispatch.resolve_attention(
             "auto", 1, 4096, ring_axis="model") == "naive"
 
 
-def test_explicit_ring_plus_dualmode_raises():
-    with pytest.raises(ValueError, match="dualmode"):
-        dispatch.resolve_attention("flash_ring", 4096, 4096,
+def test_explicit_ring_plus_dualmode_resolves_and_matches():
+    """ISSUE 7: dualmode + ring is a supported pairing — each hop runs
+    the one-sweep snapped kernel and partials fold with the int monoid,
+    so the ring output matches the single-device snapped kernel."""
+    assert dispatch.resolve_attention(
+        "flash_ring", 4096, 4096,
+        softmax_impl="dualmode") == "flash_ring"
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >1 device for a ring")
+    from repro.kernels.flash_attention_int import flash_attention_pallas_int
+    mesh = auto_mesh((n,), ("model",))
+    b, s, t = 2, 4 * n, 8 * n
+    q, k, v = _mk(b, s, t, 2, 2, 16)
+    q_pos = jnp.broadcast_to(jnp.arange(s)[None] + (t - s), (b, s))
+    kv_valid = jnp.ones((b, t), bool)
+    with mesh:
+        got = ring_flash_attention(q, k, v, q_pos=q_pos,
+                                   kv_valid=kv_valid,
                                    softmax_impl="dualmode")
+    want = flash_attention_pallas_int(q, k, v, q_pos=q_pos,
+                                      kv_valid=kv_valid, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
 
 
 def test_serve_engine_resolves_ring_prefill_per_phase():

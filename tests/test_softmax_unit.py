@@ -107,3 +107,149 @@ def test_gelu_monotone_on_positive():
     z = jnp.linspace(0.0, 8.0, 256)
     y = np.asarray(unit.gelu_dualmode(z))
     assert (np.diff(y) >= -2e-3).all()     # quantization jitter allowed
+
+
+# ---------------- snapped-max word monoid (ISSUE 7) ----------------
+# The power-of-two max snap makes the online int recurrence a TRUE word
+# monoid: (m, S, acc) partials merge with exact shifts, associatively,
+# with (SNAP_MIN, 0, 0) the identity.  These properties are what the
+# one-sweep kernel, the dual-mode decode fold, and the dual-mode ring
+# all lean on, so they are pinned here at the word level.
+
+def _snap_part(x, guard, v=None):
+    return unit.online_partial_int(x, guard, v)
+
+
+def _assert_parts_equal(a, b, acc_rtol=0.0):
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    if acc_rtol:
+        # acc is f32: the power-of-two rescales are exact but the @v adds
+        # are order-dependent, so the slack is RELATIVE f32 epsilon
+        np.testing.assert_allclose(np.asarray(a[2]), np.asarray(b[2]),
+                                   rtol=acc_rtol, atol=1e-4)
+    else:
+        np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[2]))
+
+
+def test_snap_softmax_tracks_float_and_classic_unit():
+    x = jnp.asarray(RNG.normal(size=(16, 64)) * 4, jnp.float32)
+    y = unit.softmax_snap(unit.quantize(x))
+    ref = jax.nn.softmax(x, axis=-1)
+    assert float(jnp.abs(y - ref).max()) < 6e-3
+    classic = unit.softmax_dualmode(x)
+    # snapping the max moves prob words by at most one octave fraction
+    assert float(jnp.abs(y - classic).max()) < 2e-3
+    np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, atol=2e-2)
+
+
+@pytest.mark.parametrize("n,block", [(8, 8), (33, 8), (100, 16), (7, 3),
+                                     (1000, 128), (513, 512)])
+def test_snap_blocked_telescopes_bitexact(n, block):
+    """Any blocking of the snapped online fold == whole-row snapped
+    words, bit for bit — including non-divisible tails."""
+    x = unit.quantize(jnp.asarray(RNG.normal(size=(16, n)) * 5,
+                                  jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(unit.softmax_snap_blocked(x, block)),
+        np.asarray(unit.softmax_snap(x)))
+
+
+@given(st.integers(1, 46), st.integers(1, 20))
+@settings(max_examples=40, deadline=None)
+def test_snap_merge_associative(i, j):
+    """(a . b) . c == a . (b . c) on the int words for ANY chunking —
+    the law the ring's hop order and the decode's split fold rely on."""
+    n = 48
+    x = unit.quantize(jnp.asarray(RNG.normal(size=(4, n)) * 5,
+                                  jnp.float32))
+    v = jnp.asarray(RNG.normal(size=(4, n, 8)), jnp.float32)
+    lo, hi = sorted((i, min(n - 1, i + j)))
+    if lo == hi:
+        hi = lo + 1
+    g = 0
+    a = _snap_part(x[:, :lo], g, v[:, :lo])
+    b = _snap_part(x[:, lo:hi], g, v[:, lo:hi])
+    c = _snap_part(x[:, hi:], g, v[:, hi:])
+    left = unit.online_merge_int(unit.online_merge_int(a, b), c)
+    right = unit.online_merge_int(a, unit.online_merge_int(b, c))
+    # m and S are pure int words: exact.  acc is f32 with power-of-two
+    # rescales (exact) but order-dependent adds: allclose at f32 eps.
+    _assert_parts_equal(left, right, acc_rtol=1e-5)
+
+
+@given(st.integers(1, 47))
+@settings(max_examples=40, deadline=None)
+def test_snap_split_point_invariance(i):
+    """Folding [0:i] with [i:n] reproduces the whole-row partial's words
+    exactly, for every split point."""
+    n = 48
+    x = unit.quantize(jnp.asarray(RNG.normal(size=(4, n)) * 5,
+                                  jnp.float32))
+    v = jnp.asarray(RNG.normal(size=(4, n, 8)), jnp.float32)
+    whole = _snap_part(x, 0, v)
+    merged = unit.online_merge_int(_snap_part(x[:, :i], 0, v[:, :i]),
+                                   _snap_part(x[:, i:], 0, v[:, i:]))
+    _assert_parts_equal(whole, merged, acc_rtol=1e-5)
+
+
+def test_snap_merge_sentinel_identity():
+    """(SNAP_MIN, 0, 0) is the exact identity on BOTH sides — empty
+    splits/hops are bitwise no-ops, not approximate ones."""
+    x = unit.quantize(jnp.asarray(RNG.normal(size=(4, 32)) * 5,
+                                  jnp.float32))
+    part = _snap_part(x, 0)
+    ident = (jnp.full_like(part[0], unit.SNAP_MIN),
+             jnp.zeros_like(part[1]), jnp.zeros_like(part[2]))
+    _assert_parts_equal(unit.online_merge_int(part, ident), part)
+    _assert_parts_equal(unit.online_merge_int(ident, part), part)
+
+
+def test_snap_merge_n_matches_pairwise():
+    """The vectorized n-way fold == the pairwise fold, word-exact."""
+    x = unit.quantize(jnp.asarray(RNG.normal(size=(4, 64)) * 5,
+                                  jnp.float32))
+    v = jnp.asarray(RNG.normal(size=(4, 64, 8)), jnp.float32)
+    parts = [_snap_part(x[:, i:i + 16], 0, v[:, i:i + 16])
+             for i in range(0, 64, 16)]
+    m = jnp.stack([p[0] for p in parts])
+    S = jnp.stack([p[1] for p in parts])
+    acc = jnp.stack([p[2] for p in parts])
+    mn, Sn, accn = unit.online_merge_n_int(m, S, acc, axis=0)
+    pair = parts[0]
+    for p in parts[1:]:
+        pair = unit.online_merge_int(pair, p)
+    np.testing.assert_array_equal(np.asarray(mn[0]), np.asarray(pair[0]))
+    np.testing.assert_array_equal(np.asarray(Sn[0]), np.asarray(pair[1]))
+    np.testing.assert_allclose(np.asarray(accn[0]), np.asarray(pair[2]),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_snap_guard_shift_long_rows():
+    """Rows past 2**16 engage guard_shift > 0; the blocked fold must use
+    the identical guard so the bucket words never overflow int32 and the
+    whole-row telescoping stays bitwise."""
+    n = (1 << 16) + 17                       # bit_length 17 -> guard 1
+    x = unit.quantize(jnp.asarray(RNG.normal(size=(2, n)) * 3,
+                                  jnp.float32))
+    got = unit.softmax_snap_blocked(x, 1 << 12)
+    want = unit.softmax_snap(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert bool(jnp.all(jnp.isfinite(want)))
+    # at 65k keys the floor losses in l (one word per bucket per block of
+    # the >> d) bias the sum a few percent high — bounded, not drifting
+    np.testing.assert_allclose(float(want.sum(-1).max()), 1.0, atol=1e-1)
+
+
+def test_snap_phantom_words_carry_zero_mass():
+    """PHANTOM_Q maps to the SNAP_MIN sentinel in the t domain: appending
+    phantoms changes neither the snapped max, any bucket word, nor any
+    output word."""
+    x = unit.quantize(jnp.asarray(RNG.normal(size=(4, 37)) * 5,
+                                  jnp.float32))
+    xp = jnp.concatenate(
+        [x, jnp.full((4, 27), unit.PHANTOM_Q, jnp.int32)], axis=-1)
+    got = unit.softmax_snap(xp, guard_shift=0)[:, :37]
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(unit.softmax_snap(x, guard_shift=0)))
+    assert float(jnp.abs(unit.softmax_snap(xp, guard_shift=0)[:, 37:]).max()) == 0.0
