@@ -178,21 +178,12 @@ def main_flash_int(json_path: str | None = None) -> None:
 
 
 def check_flash_int_schema(json_path: str) -> None:
-    """Assert BENCH_flash_int.json carries the ISSUE 7 contract: both a
-    sweeps-1 (snapped one-sweep) and a sweeps-3 (classic oracle) row,
-    each with an exactly-zero word-parity residual vs its whole-row
-    reference."""
-    with open(json_path) as fh:
-        d = json.load(fh)
-    for key in ("backend", "us_per_call", "sweeps_rows"):
-        assert key in d, f"BENCH_flash_int.json missing {key!r}"
-    for impl in ("flash_pallas_int", "flash_pallas_int3"):
-        assert impl in d["us_per_call"]
-    sweeps = {row["sweeps"]: row for row in d["sweeps_rows"]}
-    assert set(sweeps) == {1, 3}, f"sweeps rows: {sorted(sweeps)}"
-    for n, row in sweeps.items():
-        assert float(row["word_parity_residual"]) == 0.0, \
-            f"sweeps={n} kernel words drifted from the whole-row unit"
+    """BENCH_flash_int.json contract: both a sweeps-1 (snapped one-sweep)
+    and a sweeps-3 (classic oracle) row, each with an exactly-zero
+    word-parity residual vs its whole-row reference."""
+    from repro.analysis import schema
+    schema.validate_file(json_path, schema.FLASH_INT_SPEC,
+                         schema.FLASH_INT_RULES, "BENCH_flash_int.json")
     print(f"# BENCH_flash_int schema OK: {json_path}")
 
 
@@ -445,26 +436,13 @@ def main_decode(json_path: str | None = None,
 
 
 def check_decode_schema(json_path: str) -> None:
-    """Assert BENCH_decode.json has the shape the trajectory tooling
-    reads: per-cache-length us/token for naive and per-split flash_decode,
-    a parity residual per cache length, and engine tokens/sec for both
-    decode impls.  Lengths/splits themselves may vary (the CI smoke runs
-    a reduced sweep)."""
-    with open(json_path) as fh:
-        d = json.load(fh)
-    for key in ("backend", "cache_lens", "splits", "us_per_token",
-                "parity_max_abs_vs_naive", "engine"):
-        assert key in d, f"BENCH_decode.json missing {key!r}"
-    lens = [str(t) for t in d["cache_lens"]]
-    assert lens, "empty cache_lens"
-    for t in lens:
-        assert t in d["us_per_token"]["naive"]
-        per = d["us_per_token"]["flash_decode"][t]
-        assert per and all(str(ns) in per for ns in d["splits"])
-        assert float(d["parity_max_abs_vs_naive"][t]) <= 1e-5
-    tps = d["engine"]["tokens_per_s"]
-    assert set(tps) == {"naive", "flash_decode"} and all(
-        v > 0 for v in tps.values())
+    """BENCH_decode.json contract: per-cache-length us/token for naive and
+    per-split flash_decode, a parity residual per cache length, and engine
+    tokens/sec for both decode impls.  Lengths/splits themselves may vary
+    (the CI smoke runs a reduced sweep)."""
+    from repro.analysis import schema
+    schema.validate_file(json_path, schema.DECODE_SPEC,
+                         schema.DECODE_RULES, "BENCH_decode.json")
     print(f"# BENCH_decode schema OK: {json_path}")
 
 
@@ -599,37 +577,27 @@ def main_serve(json_path: str | None = None, *, n_requests: int = 12,
 
 
 def check_serve_schema(json_path: str) -> None:
-    """Assert BENCH_serve.json carries the tentpole claims: zero cache
-    copies on paged admission, strictly more concurrent slots than
-    contiguous at equal HBM, and decode not stalling during chunked
-    prefill (>= 1 decode tick per prefill-chunk step)."""
-    with open(json_path) as fh:
-        d = json.load(fh)
-    for key in ("backend", "interpret", "equal_hbm_tokens", "modes"):
-        assert key in d, f"BENCH_serve.json missing {key!r}"
-    assert set(d["modes"]) == {"paged", "contiguous"}
-    paged, contig = d["modes"]["paged"], d["modes"]["contiguous"]
-    for m in (paged, contig):
-        assert m["tokens"] > 0 and m["tokens_per_s"] > 0
-    assert paged["tokens"] == contig["tokens"], "workloads diverged"
-    assert paged["cache_copies"] == 0, "paged admission copied a cache"
-    assert contig["cache_copies"] > 0
-    assert paged["concurrent_hwm"] > contig["concurrent_hwm"], \
-        "paged did not out-batch contiguous at equal HBM"
-    assert paged["blocks_hwm"] is not None and paged["blocks_hwm"] > 0
-    assert paged["shared_blocks"] > 0, "workload never shared a prefix"
-    dpp = paged["decode_ticks_per_prefill_step"]
-    assert dpp is not None and dpp >= 1.0, \
-        f"decode stalled during chunked prefill ({dpp})"
-    mixed = d["mixed_phase"]
-    assert mixed["tokens"] > 0 and mixed["tokens_per_s"] > 0
-    assert mixed["decode_attn_impl"] == "flash_decode"
-    assert mixed["decode_softmax_impl"] == "dualmode"
-    assert mixed["prefill_softmax_impl"] == "float"
+    """BENCH_serve.json contract: zero cache copies on paged admission,
+    strictly more concurrent slots than contiguous at equal HBM, and
+    decode not stalling during chunked prefill (>= 1 decode tick per
+    prefill-chunk step)."""
+    from repro.analysis import schema
+    schema.validate_file(json_path, schema.SERVE_SPEC,
+                         schema.SERVE_RULES, "BENCH_serve.json")
     print(f"# BENCH_serve schema OK: {json_path}")
 
 
 if __name__ == "__main__":
+    if "--check-audit" in sys.argv:
+        # validate an existing AUDIT.json through the same declarative
+        # engine the bench schemas use (CI pairs this with the audit job)
+        from repro.analysis import schema
+        i = sys.argv.index("--check-audit")
+        path = (sys.argv[i + 1] if len(sys.argv) > i + 1
+                else "AUDIT.json")
+        schema.check_audit_json(path)
+        print(f"# AUDIT schema OK: {path}")
+        sys.exit(0)
     if "--ring-only" in sys.argv:
         i = sys.argv.index("--ring-only")
         main_flash_ring(sys.argv[i + 1] if len(sys.argv) > i + 1

@@ -1,0 +1,34 @@
+"""Static kernel auditor — proofs over jaxprs and lowered HLO.
+
+Four passes, one verdict (``python -m repro.analysis.audit``):
+
+  int_purity      no float transcendental (exp/log/erf/tanh/div/...)
+                  computes on the dual-mode WORD lattice — the int
+                  region between quantize and dequantize — in any
+                  registered dualmode/dualmode_snap path.  Walked
+                  interprocedurally over closed jaxprs, pallas kernel
+                  bodies included.
+  vmem            every pallas_call's static VMEM residency — the
+                  kernel modules' declared ``vmem_plan()`` descriptors,
+                  priced as 2x(in+out tiles) + scratch — fits
+                  ``tiling.VMEM_CORE_BUDGET`` at every canonical grid
+                  cell, and the declarations match the traced kernels'
+                  actual ref avals.
+  mesh_safety     each impl lowered under an emulated 8-device mesh
+                  with a sequence-sharded KV cache must not all-gather
+                  the whole cache per chip unless it DECLARED
+                  ``mesh_safe=False`` (shared HLO walker:
+                  ``launch.hlo_analysis.collective_result_bytes``).
+  dispatch_table  the (attn_impl x softmax_impl x phase x mesh)
+                  resolution matrix enumerates without surprise — every
+                  cell resolves or raises intentionally, every registry
+                  entry carries metadata, and the GENERATED table
+                  embedded in ``kernels/dispatch.py`` and
+                  ARCHITECTURE.md matches the live registry verbatim
+                  (doc drift is a failing cell).
+
+This package must import without jax so ``python -m
+repro.analysis.audit`` can set XLA_FLAGS (emulated devices for the mesh
+pass) before jax initializes — keep this ``__init__`` import-free; the
+pass modules import jax lazily at call time.
+"""

@@ -1,0 +1,272 @@
+"""Kernel auditor CLI: ``python -m repro.analysis.audit [--strict]``.
+
+Runs the four static passes over the live registry —
+
+  int_purity      no float transcendental on the dual-mode word lattice
+  vmem            every kernel plan fits 16 MiB/core (+ trace cross-check)
+  mesh_safety     no silent whole-cache gather vs declared mesh_safe
+  dispatch_table  resolution matrix consistent + docs not drifted
+
+— writes machine-readable AUDIT.json (validated through the shared
+``analysis.schema`` engine, the same one the bench smokes use), prints a
+human report, and exits non-zero under ``--strict`` when any pass fails.
+
+``--fixture NAME`` swaps one pass's subject for a seeded violation (a
+known-bad computation / plan / declaration / registry) — CI runs each to
+prove the auditor still catches what it claims to catch.  ``--write-docs``
+regenerates the dispatch tables embedded in ``kernels/dispatch.py`` and
+ARCHITECTURE.md.
+
+XLA_FLAGS must be set BEFORE jax is first imported for the emulated
+8-device mesh to exist; this module arranges that itself as long as
+nothing imported jax earlier in the process (the package ``__init__`` is
+deliberately import-free for this reason).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+PASSES = ("int_purity", "vmem", "mesh_safety", "dispatch_table")
+FIXTURES = ("int_purity", "vmem", "mesh", "dispatch")
+
+
+def _ensure_devices(n: int = 8) -> None:
+    """Emulate ``n`` host devices — only effective before jax import."""
+    if "jax" in sys.modules:
+        return
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+# ---------------------------------------------------------------------------
+# seeded violations: each proves one pass still detects its failure mode
+# ---------------------------------------------------------------------------
+
+
+def _fixture_int_purity() -> dict:
+    """exp computed on the word lattice (quantize -> exp -> requantize)."""
+    import jax.numpy as jnp
+
+    from . import int_purity
+
+    def bad(x):
+        words = (x * 127.0).astype(jnp.int32)           # quantize
+        f = words.astype(jnp.float32) * (1.0 / 127.0)
+        e = jnp.exp(f)                                  # forbidden here
+        return (e * 127.0).astype(jnp.int32)            # requantize
+
+    x = jnp.zeros((8, 128), jnp.float32)
+    v = int_purity.audit_fn(bad, (x,), "fixture:exp_requantize")
+    return {"status": "fail" if v else "ok",
+            "checked": ["fixture:exp_requantize"],
+            "violations": [x.as_dict() for x in v]}
+
+
+def _fixture_vmem() -> dict:
+    """A plan whose single input tile alone oversubscribes the core."""
+    from repro.kernels import tiling
+
+    from . import vmem
+
+    plan = {"in:x": ((4096, 4096), "float32")}   # 64 MiB, doubled to 128
+    fp = vmem.plan_footprint(plan)
+    budget = tiling.VMEM_CORE_BUDGET
+    ok = fp <= budget
+    return {"status": "ok" if ok else "fail",
+            "over_budget": 0 if ok else 1, "trace_mismatches": [],
+            "cells": [{"kernel": "fixture", "call": "oversubscribed",
+                       "cell": "one 4096x4096 f32 tile", "bytes": fp,
+                       "budget": budget, "ok": ok}]}
+
+
+def _fixture_mesh() -> dict:
+    """flash_decode re-audited as if it had declared mesh_safe=True."""
+    import numpy as np
+
+    import jax
+    from jax.sharding import Mesh
+
+    from . import mesh_safety
+
+    devs = jax.devices()
+    if len(devs) < mesh_safety.N_DEVICES:
+        return {"status": "skipped",
+                "reason": f"needs {mesh_safety.N_DEVICES} devices",
+                "impls": []}
+    mesh = Mesh(np.array(devs[:mesh_safety.N_DEVICES])
+                .reshape(mesh_safety.N_DEVICES), ("kv",))
+    r = mesh_safety.check_impl("flash_decode", mesh=mesh,
+                               declared_safe=True)
+    return {"status": "ok" if r["ok"] else "fail", "impls": [r]}
+
+
+def _fixture_dispatch() -> dict:
+    """An impl poked into the registry without AttentionInfo metadata."""
+    from repro.kernels import dispatch
+
+    from . import dispatch_table
+
+    dispatch._load_attention_providers()
+    dispatch._ATTENTION["rogue"] = lambda *a, **k: None
+    try:
+        return dispatch_table.run()
+    finally:
+        dispatch._ATTENTION.pop("rogue", None)
+
+
+_FIXTURE_RUNNERS = {
+    "int_purity": ("int_purity", _fixture_int_purity),
+    "vmem": ("vmem", _fixture_vmem),
+    "mesh": ("mesh_safety", _fixture_mesh),
+    "dispatch": ("dispatch_table", _fixture_dispatch),
+}
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def _report(audit: dict) -> str:
+    lines = ["kernel audit"]
+    p = audit["passes"]
+
+    ip = p["int_purity"]
+    lines.append(f"  [{ip['status']:>7}] int_purity: "
+                 f"{len(ip.get('checked', []))} paths, "
+                 f"{len(ip.get('violations', []))} violations")
+    for v in ip.get("violations", []):
+        lines.append(f"            {v['path']}: {v['prim']} at {v['where']}")
+
+    vm = p["vmem"]
+    cells = vm.get("cells", [])
+    worst = max(cells, key=lambda c: c["bytes"], default=None)
+    lines.append(f"  [{vm['status']:>7}] vmem: {len(cells)} cells, "
+                 f"{vm.get('over_budget', 0)} over budget, "
+                 f"{len(vm.get('trace_mismatches', []))} trace mismatches")
+    if worst:
+        lines.append(f"            worst: {worst['kernel']}/{worst['call']} "
+                     f"{worst['bytes'] // 1024} KiB of "
+                     f"{worst['budget'] // 1024} KiB "
+                     f"({worst['cell']})")
+    for c in cells:
+        if not c["ok"]:
+            lines.append(f"            OVER: {c['kernel']}/{c['call']} "
+                         f"{c['bytes'] // 1024} KiB ({c['cell']})")
+    for m in vm.get("trace_mismatches", []):
+        lines.append(f"            {m}")
+
+    ms = p["mesh_safety"]
+    lines.append(f"  [{ms['status']:>7}] mesh_safety: "
+                 f"{len(ms.get('impls', []))} impls"
+                 + (f" ({ms['reason']})" if ms.get("reason") else ""))
+    for r in ms.get("impls", []):
+        tag = "ok" if r["ok"] else "FAIL"
+        gather = ("whole-cache gather "
+                  f"({r['largest_gather_bytes']}B >= {r['full_kv_bytes']}B)"
+                  if r["whole_cache_gather"] else "no whole-cache gather")
+        lines.append(f"            [{tag}] {r['impl']}: declared "
+                     f"mesh_safe={r['declared_mesh_safe']}, {gather}")
+
+    dt = p["dispatch_table"]
+    lines.append(f"  [{dt['status']:>7}] dispatch_table: "
+                 f"{dt.get('cells', 0)} cells, "
+                 f"{len(dt.get('problems', []))} problems, "
+                 f"{len(dt.get('drift', []))} doc drift")
+    for msg in dt.get("problems", []) + dt.get("drift", []):
+        lines.append(f"            {msg}")
+
+    lines.append(f"  => {'OK' if audit['ok'] else 'FAIL'}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="static kernel auditor (int purity, VMEM budgets, "
+                    "mesh safety, dispatch-table truth)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any pass fails")
+    ap.add_argument("--out", default="AUDIT.json",
+                    help="where to write the machine-readable artifact")
+    ap.add_argument("--passes", default=",".join(PASSES),
+                    help=f"comma-separated subset of {','.join(PASSES)}")
+    ap.add_argument("--fixture", choices=FIXTURES,
+                    help="swap one pass's subject for a seeded violation "
+                         "(self-test: the run must then FAIL)")
+    ap.add_argument("--write-docs", action="store_true",
+                    help="regenerate the dispatch tables in dispatch.py "
+                         "and ARCHITECTURE.md, then re-audit")
+    args = ap.parse_args(argv)
+
+    _ensure_devices()
+
+    selected = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = sorted(set(selected) - set(PASSES))
+    if unknown:
+        ap.error(f"unknown passes {unknown}; have {list(PASSES)}")
+
+    from . import dispatch_table, int_purity, mesh_safety, schema, vmem
+
+    if args.write_docs:
+        for path in dispatch_table.write_docs():
+            print(f"wrote dispatch tables into {path}")
+
+    runners = {"int_purity": int_purity.run, "vmem": vmem.run,
+               "mesh_safety": mesh_safety.run,
+               "dispatch_table": dispatch_table.run}
+    if args.fixture:
+        key, fn = _FIXTURE_RUNNERS[args.fixture]
+        runners[key] = fn
+        if key not in selected:
+            selected.append(key)
+
+    passes = {}
+    for name in PASSES:
+        if name in selected:
+            passes[name] = runners[name]()
+        else:
+            passes[name] = {"status": "skipped",
+                            "reason": "not selected",
+                            **({"checked": [], "violations": []}
+                               if name == "int_purity" else {}),
+                            **({"cells": [], "over_budget": 0,
+                                "trace_mismatches": []}
+                               if name == "vmem" else {}),
+                            **({"impls": []}
+                               if name == "mesh_safety" else {}),
+                            **({"cells": 0, "problems": [], "drift": []}
+                               if name == "dispatch_table" else {})}
+
+    audit = {
+        "generated_by": "python -m repro.analysis.audit",
+        "strict": bool(args.strict),
+        "ok": all(p["status"] != "fail" for p in passes.values()),
+        "passes": passes,
+    }
+    schema.validate(audit, schema.AUDIT_SPEC, schema.AUDIT_RULES,
+                    "AUDIT.json")
+    with open(args.out, "w") as fh:
+        json.dump(audit, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+    print(_report(audit))
+    print(f"wrote {args.out}")
+    if args.fixture and audit["ok"]:
+        print(f"fixture {args.fixture!r} was NOT detected — "
+              "the auditor has gone blind", file=sys.stderr)
+        return 2
+    if args.fixture:
+        print(f"fixture {args.fixture!r} detected as intended")
+        return 1
+    return 1 if (args.strict and not audit["ok"]) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,284 @@
+"""Dispatch-table truth: the resolution matrix, enumerated and generated.
+
+The (attn_impl x softmax_impl x phase x mesh) matrix is resolved
+exhaustively through the live registry:
+
+  * every EXPLICIT impl either resolves (to itself) or raises a
+    ValueError, identically across phases and meshes — explicit picks
+    are shape/mesh independent by design (the ring upgrade lives only in
+    the 'auto' branch), and a cell that varies is an audit failure;
+  * refusal is two-sided: an entry must also RAISE when handed a mode
+    outside its declared ``AttentionInfo.modes`` (metadata that merely
+    decorates is worthless — it must match the callable's behavior);
+  * every impl present in the registry carries metadata — an impl poked
+    into ``_ATTENTION`` without registering declarations is a failure;
+  * the 'auto' cells resolve per (phase, mesh, mode) under
+    ``dispatch.analysis_mesh`` — no emulated devices needed.
+
+The same enumeration GENERATES the human tables embedded between marker
+lines in ``kernels/dispatch.py``'s docstring and ARCHITECTURE.md.
+``check_docs()`` diffs generated-vs-committed (doc drift = CI failure);
+``python -m repro.analysis.audit --write-docs`` rewrites both in place.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+DISPATCH_MARK = ("[dispatch-table:begin]", "[dispatch-table:end]")
+MD_MARK = ("<!-- dispatch-table:begin -->", "<!-- dispatch-table:end -->")
+
+
+def _resolve_cell(impl: str, mode: str, s_q: int, t_kv: int,
+                  mesh_axes, ring_axis: str) -> str:
+    """'-> name' when resolution succeeds, 'raise' on the intentional
+    ValueError.  Anything else propagates — an unintentional failure."""
+    from repro.kernels import dispatch
+
+    def go():
+        try:
+            return "-> " + dispatch.resolve_attention(
+                impl, s_q, t_kv, softmax_impl=mode, ring_axis=ring_axis)
+        except ValueError:
+            return "raise"
+
+    if mesh_axes is None:
+        return go()
+    with dispatch.analysis_mesh(mesh_axes):
+        return go()
+
+
+def enumerate_matrix() -> dict:
+    """Resolve every cell; collect per-impl and 'auto' outcomes plus any
+    consistency problems."""
+    from repro.kernels import dispatch
+
+    from . import grid
+
+    problems: list[str] = []
+    dispatch._load_attention_providers()
+    undeclared = sorted(set(dispatch._ATTENTION)
+                        - set(dispatch._ATTENTION_INFO))
+    for name in undeclared:
+        problems.append(
+            f"impl {name!r} is in the registry without AttentionInfo "
+            "metadata (registered by poking _ATTENTION directly?)")
+
+    impls = dispatch.attention_impls()
+    explicit: dict[str, dict[str, str]] = {}
+    for impl in impls:
+        if impl in undeclared:
+            continue
+        row: dict[str, str] = {}
+        for mode in grid.MODES:
+            outcomes = set()
+            for phase, (s_q, t_kv) in grid.PHASES.items():
+                for mesh_name, axes in grid.MESHES.items():
+                    ring = grid.RING_AXIS if axes else ""
+                    outcomes.add(_resolve_cell(impl, mode, s_q, t_kv,
+                                               axes, ring))
+            if len(outcomes) != 1:
+                problems.append(
+                    f"explicit impl {impl!r} mode {mode!r} resolves "
+                    f"inconsistently across phases/meshes: "
+                    f"{sorted(outcomes)}")
+            out = sorted(outcomes)[0]
+            declared = mode in dispatch.attention_info(impl).modes
+            if declared and out == "raise":
+                problems.append(
+                    f"{impl!r} declares mode {mode!r} but resolution "
+                    "raises")
+            if not declared and out != "raise":
+                problems.append(
+                    f"{impl!r} does not declare mode {mode!r} but "
+                    "resolution passes it through")
+            row[mode] = "ok" if out != "raise" else "raise"
+        explicit[impl] = row
+
+    auto: dict[tuple[str, str, str], str] = {}
+    for phase, (s_q, t_kv) in grid.PHASES.items():
+        for mesh_name, axes in grid.MESHES.items():
+            ring = grid.RING_AXIS if axes else ""
+            for mode in grid.MODES:
+                out = _resolve_cell("auto", mode, s_q, t_kv, axes, ring)
+                if out == "raise":
+                    problems.append(
+                        f"'auto' raised at phase={phase} mesh={mesh_name} "
+                        f"mode={mode} — auto must always resolve")
+                auto[(phase, mesh_name, mode)] = out.removeprefix("-> ")
+
+    problems.extend(_entry_refusals())
+    cells = (len(explicit) * len(grid.MODES) * len(grid.PHASES)
+             * len(grid.MESHES)
+             + len(grid.PHASES) * len(grid.MESHES) * len(grid.MODES))
+    return {"explicit": explicit, "auto": auto, "problems": problems,
+            "cells": cells}
+
+
+def _entry_refusals() -> list[str]:
+    """Every entry must raise ValueError on modes OUTSIDE its declared
+    set — the guard the resolver's metadata promises exists."""
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch
+
+    from . import grid
+
+    b, s, kh, g, hd = 1, 8, 1, 1, 8
+    q = jnp.zeros((b, s, kh, g, hd), jnp.float32)
+    k = jnp.zeros((b, s, kh, hd), jnp.float32)
+    v = jnp.zeros((b, s, kh, hd), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    kv_valid = jnp.ones((b, s), bool)
+
+    problems = []
+    for impl in dispatch.attention_impls():
+        info = dispatch._ATTENTION_INFO.get(impl)
+        if info is None:
+            continue       # already reported as undeclared by the caller
+        if info.needs_mesh:
+            continue                      # entry needs a live mesh to run
+        entry = dispatch.get_attention(impl)
+        for mode in grid.MODES:
+            if mode in info.modes:
+                continue
+            try:
+                entry(q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=True,
+                      scale=None, softmax_impl=mode)
+            except ValueError:
+                continue
+            except Exception as exc:       # pragma: no cover - diagnostics
+                problems.append(
+                    f"{impl!r} entry raised {type(exc).__name__} (not "
+                    f"ValueError) on undeclared mode {mode!r}")
+                continue
+            problems.append(
+                f"{impl!r} entry silently accepted undeclared "
+                f"softmax_impl={mode!r} — the word contract can be "
+                "dropped")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# table generation + doc drift
+# ---------------------------------------------------------------------------
+
+
+def generate_tables() -> str:
+    """The canonical generated block (shared verbatim by both docs)."""
+    from repro.kernels import dispatch
+
+    from . import grid
+
+    matrix = enumerate_matrix()
+    lines = [
+        "Explicit `attn_impl` x `softmax_impl` — identical across phases",
+        "and meshes (the ring upgrade exists only inside 'auto').",
+        "'raise' cells are intentional ValueErrors: a dual-mode word",
+        "contract is never silently dropped.",
+        "",
+        "| attn_impl | float | dualmode | dualmode_snap | grad "
+        "| constraints |",
+        "|---|---|---|---|---|---|",
+    ]
+    for impl in sorted(matrix["explicit"]):
+        row = matrix["explicit"][impl]
+        info = dispatch.attention_info(impl)
+        cons = [c for c, on in (("s_q=1 only", info.decode_only),
+                                ("needs mesh", info.needs_mesh),
+                                ("mesh-safe", info.mesh_safe)) if on]
+        lines.append(
+            f"| {impl} | {row['float']} | {row['dualmode']} "
+            f"| {row['dualmode_snap']} | {'yes' if info.grad else 'no'} "
+            f"| {', '.join(cons) or '-'} |")
+    lines += [
+        "",
+        "`attn_impl='auto'` by (phase, mesh), resolved on the cpu/",
+        "interpret backend — on TPU the blocked float pick is",
+        "'flash_pallas' (``models.flash.blocked_impl``); everything else",
+        "is backend-independent.",
+        "",
+        "| phase | mesh | float | dualmode | dualmode_snap |",
+        "|---|---|---|---|---|",
+    ]
+    for phase, (s_q, t_kv) in grid.PHASES.items():
+        for mesh_name in grid.MESHES:
+            cells = [matrix["auto"][(phase, mesh_name, m)]
+                     for m in grid.MODES]
+            lines.append(f"| {phase} ({s_q}x{t_kv}) | {mesh_name} "
+                         f"| {cells[0]} | {cells[1]} | {cells[2]} |")
+    return "\n".join(lines)
+
+
+def _doc_targets() -> list[tuple[str, tuple[str, str]]]:
+    from repro.kernels import dispatch as dispatch_mod
+
+    # <root>/src/repro/kernels/dispatch.py -> <root>  (repro is a
+    # namespace package, so repro.__file__ is None — walk up from here)
+    dispatch_path = os.path.abspath(dispatch_mod.__file__)
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(dispatch_path))))
+    return [
+        (dispatch_path, DISPATCH_MARK),
+        (os.path.join(root, "ARCHITECTURE.md"), MD_MARK),
+    ]
+
+
+def _extract(text: str, marks: tuple[str, str], path: str) -> str:
+    begin, end = marks
+    pattern = re.escape(begin) + r"\n(.*?)" + re.escape(end)
+    m = re.search(pattern, text, re.DOTALL)
+    if not m:
+        raise ValueError(f"{path}: markers {begin!r}/{end!r} not found")
+    return m.group(1).rstrip("\n")
+
+
+def check_docs() -> list[str]:
+    """Drift between the generated block and each committed doc."""
+    want = generate_tables()
+    drift = []
+    for path, marks in _doc_targets():
+        with open(path) as f:
+            text = f.read()
+        try:
+            have = _extract(text, marks, path)
+        except ValueError as exc:
+            drift.append(str(exc))
+            continue
+        if have.strip() != want.strip():
+            drift.append(
+                f"{os.path.basename(path)}: committed dispatch table "
+                "differs from the live registry — regenerate with "
+                "`python -m repro.analysis.audit --write-docs`")
+    return drift
+
+
+def write_docs() -> list[str]:
+    """Rewrite the generated block in both docs; returns paths touched."""
+    want = generate_tables()
+    touched = []
+    for path, (begin, end) in _doc_targets():
+        with open(path) as f:
+            text = f.read()
+        pattern = re.escape(begin) + r"\n.*?" + re.escape(end)
+        repl = f"{begin}\n{want}\n{end}"
+        new, n = re.subn(pattern, lambda _m: repl, text, flags=re.DOTALL)
+        if not n:
+            raise ValueError(f"{path}: markers not found")
+        if new != text:
+            with open(path, "w") as f:
+                f.write(new)
+            touched.append(path)
+    return touched
+
+
+def run() -> dict:
+    """Execute the pass: enumerate + doc drift."""
+    matrix = enumerate_matrix()
+    drift = check_docs()
+    problems = matrix["problems"]
+    status = "fail" if (problems or drift) else "ok"
+    return {"status": status, "cells": matrix["cells"],
+            "problems": problems, "drift": drift,
+            "auto": {f"{p}/{m}/{mode}": impl
+                     for (p, m, mode), impl in matrix["auto"].items()}}

@@ -1,0 +1,50 @@
+"""Canonical shape grid the audit passes sweep.
+
+One place pins WHICH shapes count as "the" workload, so every pass
+audits the same cells and the report rows line up: the three serving
+phases (encoder block, long prefill, single-row decode against a long
+cache) crossed with the two mesh situations (single device, 8-way KV
+ring).  Head extents stay small — the passes prove STRUCTURAL facts
+(taint, residency, collectives, resolution), none of which depend on
+the head dim, and small heads keep the jaxpr traces fast on CPU.
+"""
+from __future__ import annotations
+
+# (s_q, t_kv) per serving phase — the resolution-relevant extents.
+# decode crosses tiling.DECODE_FLASH_MIN_KV so 'auto' actually reaches
+# the split-KV kernel; prefill crosses the use_flash threshold.
+PHASES: dict[str, tuple[int, int]] = {
+    "enc": (128, 128),
+    "prefill": (4096, 4096),
+    "decode": (1, 65536),
+}
+
+# mesh name -> axis sizes for dispatch.analysis_mesh (None = no mesh)
+MESHES: dict[str, dict[str, int] | None] = {
+    "none": None,
+    "ring8": {"ring": 8},
+}
+
+RING_AXIS = "ring"
+
+MODES = ("float", "dualmode", "dualmode_snap")
+
+# head geometry shared by every attention cell (GQA group of 2 so the
+# g-dependent scratch rows are exercised, MLA-style hv == hd kept equal
+# for simplicity — vmem_plan is audited per (hd, hv) pair anyway)
+HEAD = {"hd": 8, "hv": 8, "g": 2}
+
+# trace cell: small extents for make_jaxpr-based passes (purity, the
+# vmem declared-vs-traced cross-check).  Big enough that the blocked
+# kernels take their real multi-tile grid (bq=128, bkv=256).
+TRACE_SQ, TRACE_T = 256, 256
+
+# FFN / row-softmax cells for the vmem pass
+FFN_CELL = {"m": 4096, "k": 1024, "f": 4096}
+SOFTMAX_CELL = {"rows": 4096, "cols": 4096}
+
+
+def attention_cells() -> list[dict]:
+    """One vmem-audit cell per (phase, head geometry)."""
+    return [dict(phase=name, s_q=sq, t_kv=t, **HEAD)
+            for name, (sq, t) in PHASES.items()]

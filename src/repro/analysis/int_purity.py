@@ -1,0 +1,302 @@
+"""Int-purity pass: no float transcendental on the dual-mode word path.
+
+The paper's claim is that GELU and softmax run on the SAME int unit —
+shift/add/compare arithmetic on quantized words.  The repo-wide
+invariant is therefore: in any path executed under
+``softmax_impl='dualmode'/'dualmode_snap'``, no ``exp``/``log``/``erf``/
+``tanh``/``div``/... primitive may compute ON the word lattice (the int
+region between quantize and dequantize).  Float transcendentals are fine
+OUTSIDE it — the blocked kernels' finishing ``acc / l`` divide happens
+after the words are done and feeds only the f32 output.
+
+Mechanically: flatten the closed jaxpr of each audited path
+interprocedurally (pjit/cond/custom-vjp bodies inlined positionally,
+pallas kernel bodies mapped through the ref calling convention,
+scan/while folded conservatively all-to-all), then
+
+  tainted      = forward closure from every integer-dtype var
+  feeds_words  = backward closure from every integer-dtype var
+  violation    = forbidden primitive with a tainted input AND an output
+                 in feeds_words  (i.e. the op sits int -> op -> int)
+
+which flags an ``exp`` whose result is requantized into words, but not
+the finishing divide (its quotient never reaches an int var).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# primitives that have no business on a shift/add word lattice
+FORBIDDEN = frozenset({
+    "exp", "exp2", "log", "log2", "log1p", "erf", "erf_inv", "erfc",
+    "tanh", "logistic", "div", "pow", "integer_pow", "rsqrt", "sqrt",
+    "cbrt", "sin", "cos", "atan2",
+})
+
+
+@dataclass
+class Violation:
+    path: str          # audited path name, e.g. "attn:flash_pallas_int"
+    prim: str          # offending primitive
+    where: str         # source location if the trace kept one
+
+    def as_dict(self) -> dict:
+        return {"path": self.path, "prim": self.prim, "where": self.where}
+
+
+class _Graph:
+    """Flattened dataflow graph over global var ids."""
+
+    def __init__(self):
+        self.n = 0
+        self.fwd: dict[int, set[int]] = {}
+        self.bwd: dict[int, set[int]] = {}
+        self.int_vars: set[int] = set()
+        # (prim, in_ids, out_ids, where) for forbidden eqns only
+        self.suspects: list[tuple[str, list[int], list[int], str]] = []
+
+    def new_id(self, aval) -> int:
+        i = self.n
+        self.n += 1
+        if _is_int(aval):
+            self.int_vars.add(i)
+        return i
+
+    def edge(self, a: int, b: int) -> None:
+        self.fwd.setdefault(a, set()).add(b)
+        self.bwd.setdefault(b, set()).add(a)
+
+    def closure(self, seeds: set[int], edges: dict[int, set[int]]
+                ) -> set[int]:
+        seen = set(seeds)
+        stack = list(seeds)
+        while stack:
+            for nxt in edges.get(stack.pop(), ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        return seen
+
+
+def _is_int(aval) -> bool:
+    import numpy as np
+    dtype = getattr(aval, "dtype", None)
+    return dtype is not None and np.issubdtype(dtype, np.integer)
+
+
+def _sub_jaxprs(params):
+    """(key, jaxpr) for every jaxpr-valued param (lists/tuples included)."""
+    from jax._src import core as jcore
+    for key, val in params.items():
+        items = val if isinstance(val, (list, tuple)) else [val]
+        for item in items:
+            if isinstance(item, jcore.ClosedJaxpr):
+                yield key, item.jaxpr
+            elif isinstance(item, jcore.Jaxpr):
+                yield key, item
+
+
+def _var_id(g: _Graph, env: dict, var) -> int:
+    from jax._src import core as jcore
+    if isinstance(var, jcore.Literal):
+        return g.new_id(var.aval)       # fresh node, no history
+    if var not in env:
+        env[var] = g.new_id(var.aval)
+    return env[var]
+
+
+def _where(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:
+        return "?"
+
+
+def _walk(g: _Graph, jaxpr, env: dict) -> None:
+    for eqn in jaxpr.eqns:
+        in_ids = [_var_id(g, env, v) for v in eqn.invars]
+        out_ids = [_var_id(g, env, v) for v in eqn.outvars]
+        name = eqn.primitive.name
+
+        # default dataflow: every input may reach every output
+        for a in in_ids:
+            for b in out_ids:
+                g.edge(a, b)
+
+        if name in FORBIDDEN:
+            g.suspects.append((name, in_ids, out_ids, _where(eqn)))
+
+        # stores: the written value flows INTO the ref operand, so later
+        # reads of the ref pick it up (swap: (ref, val, *idx) -> old)
+        if name in ("swap", "addupdate", "masked_swap") and len(in_ids) >= 2:
+            g.edge(in_ids[1], in_ids[0])
+
+        subs = list(_sub_jaxprs(eqn.params))
+        if not subs:
+            continue
+
+        if name == "pallas_call":
+            # kernel invars follow the ref convention: inputs, then
+            # outputs, then scratch.  Refs carry data both ways.
+            for _, kj in subs:
+                sub_env: dict = {}
+                kin = [_var_id(g, sub_env, v) for v in kj.invars]
+                n_in = len(in_ids)
+                for i, kid in enumerate(kin):
+                    if i < n_in:
+                        g.edge(in_ids[i], kid)
+                        g.edge(kid, in_ids[i])
+                    elif i - n_in < len(out_ids):
+                        g.edge(kid, out_ids[i - n_in])
+                        g.edge(out_ids[i - n_in], kid)
+                _walk(g, kj, sub_env)
+        elif name in ("pjit", "closed_call", "core_call", "custom_jvp_call",
+                      "custom_vjp_call", "custom_vjp_call_jaxpr",
+                      "remat_call", "checkpoint"):
+            for _, sub in subs:
+                sub_env = {}
+                sin = [_var_id(g, sub_env, v) for v in sub.invars]
+                sout = [_var_id(g, sub_env, v) for v in sub.outvars]
+                # positional when arities line up (the common case)
+                if len(sin) == len(in_ids):
+                    for a, b in zip(in_ids, sin):
+                        g.edge(a, b)
+                else:
+                    for a in in_ids:
+                        for b in sin:
+                            g.edge(a, b)
+                if len(sout) == len(out_ids):
+                    for a, b in zip(sout, out_ids):
+                        g.edge(a, b)
+                else:
+                    for a in sout:
+                        for b in out_ids:
+                            g.edge(a, b)
+                _walk(g, sub, sub_env)
+        elif name == "cond":
+            rest = in_ids[1:]          # in_ids[0] is the branch predicate
+            for _, sub in subs:
+                sub_env = {}
+                sin = [_var_id(g, sub_env, v) for v in sub.invars]
+                sout = [_var_id(g, sub_env, v) for v in sub.outvars]
+                src = rest if len(sin) == len(rest) else in_ids
+                if len(sin) == len(src):
+                    for a, b in zip(src, sin):
+                        g.edge(a, b)
+                else:
+                    for a in src:
+                        for b in sin:
+                            g.edge(a, b)
+                for a, b in zip(sout, out_ids):
+                    g.edge(a, b)
+                _walk(g, sub, sub_env)
+        else:
+            # scan / while / shard_map / anything else carrying jaxprs:
+            # conservative all-to-all at the boundary — taint may spread
+            # wider than reality, never narrower
+            for _, sub in subs:
+                sub_env = {}
+                sin = [_var_id(g, sub_env, v) for v in sub.invars]
+                sout = [_var_id(g, sub_env, v) for v in sub.outvars]
+                for a in in_ids:
+                    for b in sin:
+                        g.edge(a, b)
+                for a in sout:
+                    for b in out_ids:
+                        g.edge(a, b)
+                _walk(g, sub, sub_env)
+
+
+def audit_jaxpr(closed_jaxpr, path: str) -> list[Violation]:
+    """All int-path purity violations in one traced computation."""
+    g = _Graph()
+    env: dict = {}
+    jaxpr = closed_jaxpr.jaxpr
+    for v in jaxpr.invars + jaxpr.constvars:
+        _var_id(g, env, v)
+    _walk(g, jaxpr, env)
+
+    tainted = g.closure(set(g.int_vars), g.fwd)
+    feeds_words = g.closure(set(g.int_vars), g.bwd)
+    out = []
+    for prim, in_ids, out_ids, where in g.suspects:
+        if (any(i in tainted for i in in_ids)
+                and any(o in feeds_words for o in out_ids)):
+            out.append(Violation(path=path, prim=prim, where=where))
+    return out
+
+
+def audit_fn(fn, args, path: str, **kwargs) -> list[Violation]:
+    import jax
+    closed = jax.make_jaxpr(lambda *xs: fn(*xs, **kwargs))(*args)
+    return audit_jaxpr(closed, path)
+
+
+# ---------------------------------------------------------------------------
+# the audited paths: every registered dual-mode word path
+# ---------------------------------------------------------------------------
+
+
+def _attention_args(s_q: int, t_kv: int):
+    import jax.numpy as jnp
+    from . import grid
+    hd, hv, g = grid.HEAD["hd"], grid.HEAD["hv"], grid.HEAD["g"]
+    b, kh = 1, 1
+    q = jnp.zeros((b, s_q, kh, g, hd), jnp.float32)
+    k = jnp.zeros((b, t_kv, kh, hd), jnp.float32)
+    v = jnp.zeros((b, t_kv, kh, hv), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s_q, dtype=jnp.int32)[None]
+                             + (t_kv - s_q), (b, s_q))
+    kv_valid = jnp.ones((b, t_kv), bool)
+    return q, k, v, q_pos, kv_valid
+
+
+def iter_paths():
+    """(name, fn, args, kwargs) for every dual-mode path to audit."""
+    import jax.numpy as jnp
+
+    from repro.core import softmax_unit as unit
+    from repro.kernels import dispatch, dualmode_softmax
+
+    from . import grid
+
+    x = jnp.zeros((8, 128), jnp.float32)
+    yield ("softmax:dualmode", dispatch.get_softmax("dualmode"), (x,), {})
+    yield ("softmax:dualmode_snap", dispatch.get_softmax("dualmode_snap"),
+           (x,), {})
+    yield ("gelu:dualmode", unit.gelu_dualmode, (x,), {})
+    yield ("silu:dualmode", unit.silu_dualmode, (x,), {})
+    yield ("softmax_pallas:int",
+           lambda a: dualmode_softmax.softmax_pallas(
+               a, precision="int", interpret=True), (x,), {})
+    yield ("pair_act_pallas:int",
+           lambda a: dualmode_softmax.pair_act_pallas(
+               a, mode="gelu", precision="int", interpret=True), (x,), {})
+
+    s_q, t = grid.TRACE_SQ, grid.TRACE_T
+    for impl in dispatch.attention_impls():
+        info = dispatch.attention_info(impl)
+        int_modes = sorted(info.modes & {"dualmode", "dualmode_snap"})
+        if not int_modes or info.needs_mesh:
+            # the ring's per-hop body IS the single-device int kernel
+            # audited here; shard_map tracing needs live mesh devices
+            continue
+        sq = 1 if info.decode_only else s_q
+        q, k, v, q_pos, kv_valid = _attention_args(sq, t)
+        for mode in int_modes:
+            yield (f"attn:{impl}:{mode}", dispatch.get_attention(impl),
+                   (q, k, v),
+                   dict(q_pos=q_pos, kv_valid=kv_valid, causal=True,
+                        scale=None, softmax_impl=mode))
+
+
+def run() -> dict:
+    """Execute the pass over every registered dual-mode path."""
+    checked, violations = [], []
+    for name, fn, args, kwargs in iter_paths():
+        checked.append(name)
+        violations.extend(v.as_dict()
+                          for v in audit_fn(fn, args, name, **kwargs))
+    return {"status": "fail" if violations else "ok",
+            "checked": checked, "violations": violations}

@@ -1,0 +1,123 @@
+"""Mesh-safety pass: no silent whole-cache gather under a sharded KV.
+
+A pallas_call has no SPMD partitioning rule, so lowering a single-device
+kernel under a mesh that shards the KV sequence makes XLA all-gather the
+FULL cache onto every chip — exactly the per-chip HBM blowup the launch
+fit-check guards against, and the reason the 'auto' decode pick is
+mesh-gated.  Declarations in the dispatch registry
+(``AttentionInfo.mesh_safe``) encode which impls are safe to lower
+sharded; this pass verifies the declarations against the compiler.
+
+Mechanics: each non-ring impl is jitted under an emulated 8-device mesh
+with the KV operands sharded over the sequence axis and the query
+replicated, compiled to post-SPMD HLO, and scanned with the shared
+walker (``launch.hlo_analysis.collective_result_bytes``) for all-gather
+results at least as large as one full KV operand.  Verdicts:
+
+  declared mesh_safe=True  + whole-cache gather found   -> FAIL
+  declared mesh_safe=False + whole-cache gather found   -> ok (honest)
+  declared mesh_safe=False + no gather                  -> ok (note only:
+                                the declaration is merely conservative)
+
+``flash_ring`` (needs_mesh) is excluded: it IS the sharded composition,
+built from shard_map — there is no "lower it under an ambient mesh it
+didn't ask for" scenario; resolution never routes a sharded cache to it
+implicitly without the ring axis being present.
+
+Requires >= ``N_DEVICES`` emulated devices (the audit CLI sets
+XLA_FLAGS before importing jax); under fewer devices the pass reports
+status 'skipped' rather than guessing.
+"""
+from __future__ import annotations
+
+N_DEVICES = 8
+
+# lowering shape: long enough that a whole-cache gather is unambiguous,
+# short enough that interpret-mode pallas compiles quickly on CPU
+_T_KV = 4096
+
+
+def _gather_verdict(fn, q, k, v, mesh) -> dict:
+    """Compile under the sharded-KV mesh; report the largest all-gather."""
+    import jax
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import hlo_analysis as ha
+
+    kv_shard = NamedSharding(mesh, P(None, "kv", None, None))
+    rep = NamedSharding(mesh, P())
+    text = (jax.jit(fn, in_shardings=(rep, kv_shard, kv_shard))
+            .lower(q, k, v).compile().as_text())
+    sizes = ha.collective_result_bytes(text, "all-gather")
+    full_kv = k.size * k.dtype.itemsize
+    return {
+        "all_gathers": len(sizes),
+        "largest_gather_bytes": max(sizes) if sizes else 0,
+        "full_kv_bytes": int(full_kv),
+        "whole_cache_gather": bool(sizes) and max(sizes) >= full_kv,
+    }
+
+
+def check_impl(impl: str, *, mesh, declared_safe: bool | None = None
+               ) -> dict:
+    """Verdict for one registered impl under the sharded-KV mesh."""
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch
+
+    from . import grid
+
+    info = dispatch.attention_info(impl)
+    declared = info.mesh_safe if declared_safe is None else declared_safe
+    hd, hv, g = grid.HEAD["hd"], grid.HEAD["hv"], grid.HEAD["g"]
+    b, kh = 2, 1
+    s_q = 1 if info.decode_only else 128
+    q = jnp.zeros((b, s_q, kh, g, hd), jnp.float32)
+    k = jnp.zeros((b, _T_KV, kh, hd), jnp.float32)
+    v = jnp.zeros((b, _T_KV, kh, hv), jnp.float32)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(s_q, dtype=jnp.int32)[None] + (_T_KV - s_q), (b, s_q))
+    kv_valid = jnp.ones((b, _T_KV), bool)
+    mode = "float" if "float" in info.modes else sorted(info.modes)[0]
+    entry = dispatch.get_attention(impl)
+
+    def fn(q_, k_, v_):
+        return entry(q_, k_, v_, q_pos=q_pos, kv_valid=kv_valid,
+                     causal=True, scale=None, softmax_impl=mode)
+
+    verdict = _gather_verdict(fn, q, k, v, mesh)
+    verdict.update({
+        "impl": impl,
+        "declared_mesh_safe": declared,
+        "ok": not (declared and verdict["whole_cache_gather"]),
+    })
+    return verdict
+
+
+def run(impls=None) -> dict:
+    """Execute the pass over every non-ring registered impl."""
+    import numpy as np
+
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.kernels import dispatch
+
+    devs = jax.devices()
+    if len(devs) < N_DEVICES:
+        return {"status": "skipped",
+                "reason": f"needs {N_DEVICES} devices, have {len(devs)} "
+                          "(run via python -m repro.analysis.audit, which "
+                          "sets XLA_FLAGS before jax imports)",
+                "impls": []}
+    mesh = Mesh(np.array(devs[:N_DEVICES]).reshape(N_DEVICES), ("kv",))
+    if impls is None:
+        impls = [i for i in dispatch.attention_impls()
+                 if not dispatch.attention_info(i).needs_mesh]
+    results, bad = [], 0
+    for impl in impls:
+        r = check_impl(impl, mesh=mesh)
+        bad += 0 if r["ok"] else 1
+        results.append(r)
+    return {"status": "fail" if bad else "ok", "impls": results}

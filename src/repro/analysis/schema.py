@@ -1,0 +1,244 @@
+"""One declarative validator for every machine-readable artifact.
+
+The per-bench ``check_*_schema`` functions in benchmarks/bench_kernels.py
+and the AUDIT.json check used to be (or would have become) N hand-rolled
+assertion walks; this module is the single engine they all share.  A
+schema is data:
+
+  type            isinstance check (bool is NOT an int here)
+  {k: spec}       dict with at least these keys, each value checked;
+                  extra keys are allowed (artifacts may grow)
+  [spec]          list/tuple, every element checked
+  ("keys", spec)  dict with arbitrary keys, every VALUE checked
+  ("any_of", *s)  first matching alternative wins
+  ("eq", v)       exact value
+  ("in", vs)      membership
+  callable        predicate(value) -> True, or False/str (the error)
+
+Cross-field invariants that don't fit a tree walk ride along as
+``rules``: (description, predicate(whole_obj)) pairs.
+
+``validate`` collects EVERY error and raises one AssertionError listing
+them — a CI failure names all the drifted fields at once.
+"""
+from __future__ import annotations
+
+import json
+
+NUM = ("any_of", int, float)
+
+
+def check(obj, spec, path: str = "$") -> list[str]:
+    """All schema violations of ``obj`` against ``spec`` (empty = ok)."""
+    if isinstance(spec, type):
+        if spec in (int, float) and isinstance(obj, bool):
+            return [f"{path}: expected {spec.__name__}, got bool"]
+        if spec is float and isinstance(obj, int):
+            return []
+        if not isinstance(obj, spec):
+            return [f"{path}: expected {spec.__name__}, "
+                    f"got {type(obj).__name__}"]
+        return []
+    if isinstance(spec, tuple):
+        tag = spec[0]
+        if tag == "any_of":
+            fails = []
+            for alt in spec[1:]:
+                errs = check(obj, alt, path)
+                if not errs:
+                    return []
+                fails.extend(errs)
+            return [f"{path}: no alternative matched "
+                    f"({'; '.join(fails)})"]
+        if tag == "eq":
+            return ([] if obj == spec[1]
+                    else [f"{path}: expected {spec[1]!r}, got {obj!r}"])
+        if tag == "in":
+            return ([] if obj in spec[1]
+                    else [f"{path}: {obj!r} not in {sorted(spec[1])!r}"])
+        if tag == "keys":
+            if not isinstance(obj, dict):
+                return [f"{path}: expected dict, got {type(obj).__name__}"]
+            out = []
+            for k, v in obj.items():
+                out.extend(check(v, spec[1], f"{path}.{k}"))
+            return out
+        raise ValueError(f"unknown spec tag {tag!r} at {path}")
+    if isinstance(spec, dict):
+        if not isinstance(obj, dict):
+            return [f"{path}: expected dict, got {type(obj).__name__}"]
+        out = []
+        for k, sub in spec.items():
+            if k not in obj:
+                out.append(f"{path}: missing key {k!r}")
+            else:
+                out.extend(check(obj[k], sub, f"{path}.{k}"))
+        return out
+    if isinstance(spec, list):
+        if not isinstance(obj, (list, tuple)):
+            return [f"{path}: expected list, got {type(obj).__name__}"]
+        out = []
+        for i, item in enumerate(obj):
+            out.extend(check(item, spec[0], f"{path}[{i}]"))
+        return out
+    if callable(spec):
+        try:
+            res = spec(obj)
+        except Exception as exc:
+            return [f"{path}: predicate raised {exc!r}"]
+        if res is True or res is None:
+            return []
+        return [f"{path}: {res if isinstance(res, str) else 'predicate failed'}"]
+    raise ValueError(f"unintelligible spec {spec!r} at {path}")
+
+
+def validate(obj, spec, rules=(), name: str = "object") -> None:
+    """Raise AssertionError listing every schema/rule violation."""
+    errors = check(obj, spec, "$")
+    for desc, pred in rules:
+        try:
+            ok = pred(obj)
+        except Exception as exc:
+            ok = False
+            desc = f"{desc} (rule raised {exc!r})"
+        if not ok:
+            errors.append(f"rule failed: {desc}")
+    assert not errors, f"{name} schema violations:\n  " + "\n  ".join(errors)
+
+
+def validate_file(path: str, spec, rules=(), name: str | None = None):
+    with open(path) as fh:
+        obj = json.load(fh)
+    validate(obj, spec, rules, name or path)
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# bench artifact schemas (shared with benchmarks/bench_kernels.py)
+# ---------------------------------------------------------------------------
+
+FLASH_INT_SPEC = {
+    "backend": str,
+    "us_per_call": {"flash_pallas_int": NUM, "flash_pallas_int3": NUM},
+    "sweeps_rows": [{"sweeps": int, "word_parity_residual": NUM}],
+}
+FLASH_INT_RULES = [
+    ("both sweep counts {1, 3} present",
+     lambda d: {r["sweeps"] for r in d["sweeps_rows"]} == {1, 3}),
+    ("kernel words match the whole-row unit exactly (residual 0)",
+     lambda d: all(float(r["word_parity_residual"]) == 0.0
+                   for r in d["sweeps_rows"])),
+]
+
+DECODE_SPEC = {
+    "backend": str,
+    "cache_lens": [int],
+    "splits": [int],
+    "us_per_token": {"naive": ("keys", NUM),
+                     "flash_decode": ("keys", ("keys", NUM))},
+    "parity_max_abs_vs_naive": ("keys", NUM),
+    "engine": {"tokens_per_s": {"naive": NUM, "flash_decode": NUM}},
+}
+DECODE_RULES = [
+    ("at least one cache length swept", lambda d: len(d["cache_lens"]) > 0),
+    ("at least one split count swept", lambda d: len(d["splits"]) > 0),
+    ("naive timed at every cache length",
+     lambda d: all(str(t) in d["us_per_token"]["naive"]
+                   for t in d["cache_lens"])),
+    ("flash_decode timed at every (cache length, split)",
+     lambda d: all(str(n) in d["us_per_token"]["flash_decode"][str(t)]
+                   for t in d["cache_lens"] for n in d["splits"])),
+    ("split-KV decode matches naive to 1e-5 at every length",
+     lambda d: all(float(d["parity_max_abs_vs_naive"][str(t)]) <= 1e-5
+                   for t in d["cache_lens"])),
+    ("both engine impls made positive tokens/sec",
+     lambda d: all(v > 0 for v in d["engine"]["tokens_per_s"].values())),
+]
+
+_MODE_SPEC = {"tokens": int, "tokens_per_s": NUM, "cache_copies": int,
+              "concurrent_hwm": int}
+SERVE_SPEC = {
+    "backend": str,
+    "interpret": bool,
+    "equal_hbm_tokens": int,
+    "modes": {"paged": _MODE_SPEC, "contiguous": _MODE_SPEC},
+    "mixed_phase": {"tokens": int, "tokens_per_s": NUM,
+                    "decode_attn_impl": ("eq", "flash_decode"),
+                    "decode_softmax_impl": ("eq", "dualmode"),
+                    "prefill_softmax_impl": ("eq", "float")},
+}
+SERVE_RULES = [
+    ("both modes produced tokens at positive throughput",
+     lambda d: all(m["tokens"] > 0 and m["tokens_per_s"] > 0
+                   for m in d["modes"].values())),
+    ("paged and contiguous ran the same workload",
+     lambda d: d["modes"]["paged"]["tokens"]
+     == d["modes"]["contiguous"]["tokens"]),
+    ("paged admission never copied a cache",
+     lambda d: d["modes"]["paged"]["cache_copies"] == 0),
+    ("contiguous admission did copy (the cost paged removes)",
+     lambda d: d["modes"]["contiguous"]["cache_copies"] > 0),
+    ("paged out-batches contiguous at equal HBM",
+     lambda d: d["modes"]["paged"]["concurrent_hwm"]
+     > d["modes"]["contiguous"]["concurrent_hwm"]),
+    ("block pool actually used",
+     lambda d: (d["modes"]["paged"].get("blocks_hwm") or 0) > 0),
+    ("prefix sharing found at least one shared block",
+     lambda d: (d["modes"]["paged"].get("shared_blocks") or 0) > 0),
+    ("decode does not stall during chunked prefill",
+     lambda d: (d["modes"]["paged"].get("decode_ticks_per_prefill_step")
+                or 0) >= 1.0),
+    ("mixed-phase engine produced tokens",
+     lambda d: d["mixed_phase"]["tokens"] > 0
+     and d["mixed_phase"]["tokens_per_s"] > 0),
+]
+
+# ---------------------------------------------------------------------------
+# AUDIT.json (the auditor's own artifact goes through the same engine)
+# ---------------------------------------------------------------------------
+
+_STATUS = ("in", {"ok", "fail", "skipped"})
+AUDIT_SPEC = {
+    "generated_by": str,
+    "strict": bool,
+    "ok": bool,
+    "passes": {
+        "int_purity": {"status": _STATUS, "checked": [str],
+                       "violations": [{"path": str, "prim": str,
+                                       "where": str}]},
+        "vmem": {"status": _STATUS, "over_budget": int,
+                 "trace_mismatches": [str],
+                 "cells": [{"kernel": str, "call": str, "cell": str,
+                            "bytes": int, "budget": int, "ok": bool}]},
+        "mesh_safety": {"status": _STATUS,
+                        "impls": [{"impl": str, "ok": bool,
+                                   "declared_mesh_safe": bool,
+                                   "whole_cache_gather": bool,
+                                   "largest_gather_bytes": int,
+                                   "full_kv_bytes": int}]},
+        "dispatch_table": {"status": _STATUS, "cells": int,
+                           "problems": [str], "drift": [str]},
+    },
+}
+# coverage floors apply only to passes CLAIMING "ok" — a failing pass
+# (e.g. a seeded --fixture run over one subject) already did its job
+AUDIT_RULES = [
+    ("ok iff no pass failed",
+     lambda a: a["ok"] == all(p["status"] != "fail"
+                              for p in a["passes"].values())),
+    ("an ok purity pass walked at least the unit + kernel paths",
+     lambda a: a["passes"]["int_purity"]["status"] != "ok"
+     or len(a["passes"]["int_purity"]["checked"]) >= 6),
+    ("an ok vmem pass priced the whole grid",
+     lambda a: a["passes"]["vmem"]["status"] != "ok"
+     or len(a["passes"]["vmem"]["cells"]) >= 10),
+    ("an ok dispatch pass enumerated the full matrix",
+     lambda a: a["passes"]["dispatch_table"]["status"] != "ok"
+     or a["passes"]["dispatch_table"]["cells"] >= 100),
+]
+
+
+def check_audit_json(path: str) -> dict:
+    """Validate AUDIT.json through the shared engine (bench smokes call
+    this with ``--check-audit``)."""
+    return validate_file(path, AUDIT_SPEC, AUDIT_RULES, "AUDIT.json")

@@ -1,0 +1,176 @@
+"""VMEM-budget pass: every kernel's resident set fits one TensorCore.
+
+Each Pallas kernel module exports a static ``vmem_plan()`` — the block
+shapes and dtypes of its in/out tiles and scratch buffers at a given
+problem shape (mirroring the BlockSpecs it actually passes to
+pallas_call).  This pass prices each plan over the canonical shape grid:
+
+    footprint = 2 x (input tiles + output tiles)  +  scratch
+                ^^^ double-buffered by the pipeline ^^^
+
+and fails any cell above ``tiling.VMEM_CORE_BUDGET`` (16 MiB/core).
+
+Declarations can lie, so the pass also CROSS-CHECKS them against the
+kernels themselves: it traces representative pallas_calls and asserts
+every kernel ref aval (shape, dtype) — inputs, outputs, scratch — is
+accounted for in the module's declared plan at the same shape.  A kernel
+that grows a new scratch buffer without updating its plan fails here,
+not in production.
+"""
+from __future__ import annotations
+
+FOOTPRINT_BUFFERING = 2   # in/out tiles are double-buffered by the pipeline
+
+
+def _nbytes(entry) -> int:
+    import jax.numpy as jnp
+    shape, dtype = entry
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * jnp.dtype(dtype).itemsize
+
+
+def plan_footprint(plan: dict) -> int:
+    """Bytes resident for one pallas_call's plan ({ref: (shape, dtype)})."""
+    io = sum(_nbytes(v) for k, v in plan.items()
+             if not k.startswith("scratch:"))
+    scratch = sum(_nbytes(v) for k, v in plan.items()
+                  if k.startswith("scratch:"))
+    return FOOTPRINT_BUFFERING * io + scratch
+
+
+def iter_cells():
+    """(kernel_module_name, call_name, cell_desc, plan) over the grid."""
+    from repro.kernels import (dualmode_softmax, flash_attention,
+                               flash_attention_bwd, flash_attention_int,
+                               flash_decode, fused_ffn, ring_attention)
+
+    from . import grid
+
+    for cell in grid.attention_cells():
+        shape = (cell["s_q"], cell["t_kv"], cell["hd"], cell["hv"],
+                 cell["g"])
+        desc = f"{cell['phase']} s_q={cell['s_q']} t={cell['t_kv']}"
+        if cell["s_q"] == 1:
+            for call, plan in flash_decode.vmem_plan(
+                    cell["t_kv"], cell["hd"], cell["hv"], cell["g"]).items():
+                yield "flash_decode", call, desc, plan
+            continue
+        for mod in (flash_attention, flash_attention_int,
+                    flash_attention_bwd, ring_attention):
+            for call, plan in mod.vmem_plan(*shape).items():
+                yield mod.__name__.rsplit(".", 1)[-1], call, desc, plan
+
+    f = grid.FFN_CELL
+    for call, plan in fused_ffn.vmem_plan(f["m"], f["k"], f["f"]).items():
+        yield "fused_ffn", call, f"m={f['m']} k={f['k']} f={f['f']}", plan
+    s = grid.SOFTMAX_CELL
+    for call, plan in dualmode_softmax.vmem_plan(
+            s["rows"], s["cols"]).items():
+        yield "dualmode_softmax", call, \
+            f"rows={s['rows']} cols={s['cols']}", plan
+
+
+# ---------------------------------------------------------------------------
+# declared-vs-traced cross-check
+# ---------------------------------------------------------------------------
+
+
+def _kernel_ref_avals(closed_jaxpr):
+    """[(shape, dtype_str)] of every pallas kernel ref in the trace."""
+    from jax._src import core as jcore
+
+    refs = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            subs = []
+            for val in eqn.params.values():
+                items = val if isinstance(val, (list, tuple)) else [val]
+                for item in items:
+                    if isinstance(item, jcore.ClosedJaxpr):
+                        subs.append(item.jaxpr)
+                    elif isinstance(item, jcore.Jaxpr):
+                        subs.append(item)
+            if eqn.primitive.name == "pallas_call":
+                for sub in subs:
+                    for var in sub.invars:
+                        aval = var.aval
+                        refs.append((tuple(aval.shape), str(aval.dtype)))
+            else:
+                for sub in subs:
+                    walk(sub)
+
+    walk(closed_jaxpr.jaxpr)
+    return refs
+
+
+def cross_check() -> list[str]:
+    """Trace representative kernels; every traced kernel ref must appear
+    in the module's declared plan at the same shape.  Returns problems.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import flash_attention, flash_attention_int
+
+    from . import grid
+
+    s_q, t = grid.TRACE_SQ, grid.TRACE_T
+    hd, hv, g = grid.HEAD["hd"], grid.HEAD["hv"], grid.HEAD["g"]
+    b, kh = 1, 1
+    q = jnp.zeros((b, s_q, kh, g, hd), jnp.float32)
+    k = jnp.zeros((b, t, kh, hd), jnp.float32)
+    v = jnp.zeros((b, t, kh, hv), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(s_q, dtype=jnp.int32)[None],
+                             (b, s_q))
+    kv_valid = jnp.ones((b, t), bool)
+
+    targets = [
+        ("flash_attention", "flash_fwd",
+         lambda: flash_attention.flash_attention_pallas(
+             q, k, v, q_pos=q_pos, kv_valid=kv_valid, interpret=True),
+         flash_attention.vmem_plan(s_q, t, hd, hv, g)),
+        ("flash_attention_int", "flash_int_onesweep",
+         lambda: flash_attention_int.flash_attention_pallas_int(
+             q, k, v, q_pos=q_pos, kv_valid=kv_valid, interpret=True),
+         flash_attention_int.vmem_plan(s_q, t, hd, hv, g)),
+    ]
+    problems = []
+    for mod_name, call_name, thunk, plans in targets:
+        traced = _kernel_ref_avals(jax.make_jaxpr(thunk)())
+        if not traced:
+            problems.append(f"{mod_name}: no pallas_call found in trace")
+            continue
+        declared = {}
+        for entry in plans[call_name].values():
+            shape, dtype = entry
+            key = (tuple(int(d) for d in shape), str(jnp.dtype(dtype)))
+            declared[key] = declared.get(key, 0) + 1
+        seen: dict = {}
+        for key in traced:
+            seen[key] = seen.get(key, 0) + 1
+            if seen[key] > declared.get(key, 0):
+                problems.append(
+                    f"{mod_name}.{call_name}: traced kernel ref "
+                    f"{key[1]}{list(key[0])} not declared in vmem_plan()")
+    return problems
+
+
+def run(budget: int | None = None) -> dict:
+    """Execute the pass: budget every grid cell + cross-check traces."""
+    from repro.kernels import tiling
+
+    budget = tiling.VMEM_CORE_BUDGET if budget is None else budget
+    cells, over = [], 0
+    for mod, call, desc, plan in iter_cells():
+        fp = plan_footprint(plan)
+        ok = fp <= budget
+        over += 0 if ok else 1
+        cells.append({"kernel": mod, "call": call, "cell": desc,
+                      "bytes": fp, "budget": budget, "ok": ok})
+    mismatches = cross_check()
+    status = "fail" if (over or mismatches) else "ok"
+    return {"status": status, "cells": cells, "over_budget": over,
+            "trace_mismatches": mismatches}

@@ -29,9 +29,8 @@ from __future__ import annotations
 
 import math
 
-import jax.numpy as jnp
-
 import jax
+import jax.numpy as jnp
 
 from .fixedpoint import (
     EXP_FRAC, I32, IN_FRAC, IN_MAX, IN_MIN, T_FRAC,

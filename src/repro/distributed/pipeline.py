@@ -16,7 +16,6 @@ shard_map with no per-stage python dispatch.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -20,24 +20,46 @@ pinned oracle), ``kernels/ring_attention.py`` registers 'flash_ring',
 imports nothing from ``models``, which keeps the layering acyclic:
 datapath -> kernels -> dispatch -> models.
 
-Attention resolution is softmax-aware: ``softmax_impl='dualmode'`` can
-never be silently dropped.  The resolution table:
+Attention resolution is softmax-aware: ``softmax_impl='dualmode'`` (or
+'dualmode_snap') can never be silently dropped.  Every registration
+DECLARES its capabilities (:class:`AttentionInfo`: honored softmax
+modes, differentiability, s_q=1-only, mesh needs/safety) and resolution
+is driven by those declarations — the table below is GENERATED from the
+live registry by ``python -m repro.analysis.audit --write-docs`` and
+re-derived on every audit run; a mismatch between this text and the
+registry is a CI failure (the dispatch-table pass), so regenerate
+instead of hand-editing.
 
-  impl        + dualmode                    + float
-  ----------- ----------------------------- -------------------------
-  auto        short rows -> 'naive';        shape/backend/mesh rule
-              blocked -> 'flash_pallas_int' (flash / flash_pallas /
-              (one-sweep snapped unit);     flash_decode / flash_ring
-              s_q=1 long KV ->              / naive)
-              'flash_decode' (int split
-              path); ring opt-in ->
-              'flash_ring' (int hop fold)
-  flash /     ValueError (float log-domain  passes through
-  flash_pallas by construction)
-  flash_decode runs its int snapped split   runs the float split path
-  flash_ring   path (dual-mode capable)     runs the float hop fold
-  flash_pallas passes through               ValueError (the kernels
-  _int / _int3                              ARE the unit)
+[dispatch-table:begin]
+Explicit `attn_impl` x `softmax_impl` — identical across phases
+and meshes (the ring upgrade exists only inside 'auto').
+'raise' cells are intentional ValueErrors: a dual-mode word
+contract is never silently dropped.
+
+| attn_impl | float | dualmode | dualmode_snap | grad | constraints |
+|---|---|---|---|---|---|
+| flash | ok | raise | raise | yes | - |
+| flash_decode | ok | ok | ok | no | s_q=1 only |
+| flash_pallas | ok | raise | raise | yes | - |
+| flash_pallas_int | raise | ok | ok | no | - |
+| flash_pallas_int3 | raise | ok | raise | no | - |
+| flash_ring | ok | ok | ok | yes | needs mesh, mesh-safe |
+| naive | ok | ok | ok | yes | mesh-safe |
+
+`attn_impl='auto'` by (phase, mesh), resolved on the cpu/
+interpret backend — on TPU the blocked float pick is
+'flash_pallas' (``models.flash.blocked_impl``); everything else
+is backend-independent.
+
+| phase | mesh | float | dualmode | dualmode_snap |
+|---|---|---|---|---|
+| enc (128x128) | none | naive | naive | naive |
+| enc (128x128) | ring8 | naive | naive | naive |
+| prefill (4096x4096) | none | flash | flash_pallas_int | flash_pallas_int |
+| prefill (4096x4096) | ring8 | flash_ring | flash_ring | flash_ring |
+| decode (1x65536) | none | flash_decode | flash_decode | flash_decode |
+| decode (1x65536) | ring8 | naive | naive | naive |
+[dispatch-table:end]
 
 Resolution is also shape- and backend-aware through the 'auto' rule
 (registered by ``models/flash.py``): s_q=1 against a long KV cache picks
@@ -56,6 +78,8 @@ according to ``softmax_impl``.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
+from dataclasses import dataclass
 from typing import Callable
 
 import jax
@@ -111,16 +135,42 @@ _ATTENTION: dict[str, Callable] = {}
 _ATTENTION_AUTO: list[Callable] = []   # single slot: (s_q, t) -> impl name
 
 
-# blocked impls that run the float log-domain datapath by construction —
-# resolution refuses to pair these with softmax_impl='dualmode' (the
-# bit-accurate words come from 'naive', 'flash_pallas_int', or the
-# dual-mode-capable 'flash_decode'/'flash_ring' entries, which route to
-# their int snapped paths internally)
-FLOAT_BLOCKED_ATTENTION = frozenset({"flash", "flash_pallas"})
+@dataclass(frozen=True)
+class AttentionInfo:
+    """Declared capabilities of one registered attention impl.
 
-# kernels that ARE the bit-accurate unit — they cannot produce float-path
-# words, so resolution refuses any softmax_impl but 'dualmode'
-INT_ATTENTION = frozenset({"flash_pallas_int", "flash_pallas_int3"})
+    Resolution, the static auditor (``repro.analysis``), and the
+    generated resolution table are all driven by these declarations, so
+    an entry whose behavior drifts from its metadata fails the audit's
+    dispatch-table pass.
+
+    modes       softmax_impl values the entry honors.  Float-datapath
+                kernels declare {'float'}; the int kernels declare the
+                word contracts they stream ('dualmode_snap' for snapped
+                words); dual-mode-CAPABLE entries declare all three and
+                route internally.
+    grad        differentiable (JAX AD or a custom VJP).  The int word
+                paths are forward-only: step-quantized words have zero
+                gradient a.e.
+    decode_only entry contract is s_q == 1 rows (split-KV decode).
+    needs_mesh  entry requires an ambient mesh carrying ``ring_axis``.
+    mesh_safe   lowering against a KV-sequence-sharded cache does NOT
+                materialize the full cache per chip (the whole-cache
+                all-gather the analysis mesh-safety pass detects).
+    note        one-line annotation for the generated table.
+    """
+    modes: frozenset[str]
+    grad: bool
+    decode_only: bool = False
+    needs_mesh: bool = False
+    mesh_safe: bool = False
+    note: str = ""
+
+
+_ATTENTION_INFO: dict[str, AttentionInfo] = {}
+
+# analysis-only ambient-mesh override (see analysis_mesh below)
+_MESH_OVERRIDE: list = []
 
 
 def ambient_mesh():
@@ -130,6 +180,8 @@ def ambient_mesh():
     mesh from here, so model code threads only the ``ring_axis`` string
     (configs stay pure data) and the same resolution works at trace
     time inside jit."""
+    if _MESH_OVERRIDE:
+        return _MESH_OVERRIDE[-1]
     try:
         from jax.interpreters import pxla
         mesh = pxla.thread_resources.env.physical_mesh
@@ -148,21 +200,74 @@ def ring_axis_size(ring_axis: str | None) -> int:
     return mesh.shape[ring_axis]
 
 
-def register_attention(name: str, fn: Callable) -> None:
+class _AnalysisMesh:
+    """Resolution-level stand-in for a Mesh — only the attributes the
+    resolver reads (``axis_names``, ``shape``, ``empty``) exist, so the
+    dispatch matrix can be enumerated without emulated devices."""
+
+    def __init__(self, axis_sizes: dict[str, int]):
+        self.shape = dict(axis_sizes)
+        self.axis_names = tuple(axis_sizes)
+        self.empty = not axis_sizes
+
+    def __repr__(self) -> str:   # pragma: no cover - debug aid
+        return f"_AnalysisMesh({self.shape})"
+
+
+@contextmanager
+def analysis_mesh(axis_sizes: dict[str, int]):
+    """Make :func:`ambient_mesh` report a mesh with ``axis_sizes``.
+
+    ANALYSIS-ONLY seam: ``repro.analysis.dispatch_table`` enumerates the
+    (impl x softmax x phase x mesh) resolution matrix under meshes that
+    need not exist on the current backend.  Never use this to RUN a
+    computation — only :func:`resolve_attention` and the 'auto' rule
+    consult :func:`ambient_mesh`, and only they see the stand-in.
+    """
+    _MESH_OVERRIDE.append(_AnalysisMesh(axis_sizes))
+    try:
+        yield
+    finally:
+        _MESH_OVERRIDE.pop()
+
+
+def register_attention(name: str, fn: Callable, *,
+                       modes, grad: bool, decode_only: bool = False,
+                       needs_mesh: bool = False, mesh_safe: bool = False,
+                       note: str = "") -> None:
     """fn(q, k, v, *, q_pos, kv_valid, causal, scale, softmax_impl,
-    ring_axis) -> (B,S,K,G,hv).
+    ring_axis) -> (B,S,K,G,hv), plus the declared capability metadata
+    (see :class:`AttentionInfo`).
 
     Every implementation takes the full contract (``ring_axis`` names
     the mesh axis the sequence-parallel ring rotates over; only
-    'flash_ring' acts on it, the others accept and ignore it).  'naive'
-    honors any ``softmax_impl``; 'flash_decode' and 'flash_ring' are
-    dual-mode CAPABLE — their entries route to the float or the snapped
-    int path on ``softmax_impl``; the float blocked ones ('flash',
-    'flash_pallas') are the float log-domain form by construction and
-    are never resolved with 'dualmode' (see :func:`resolve_attention`);
-    'flash_pallas_int'/'flash_pallas_int3' ARE the dual-mode unit
-    streamed and require 'dualmode'."""
+    'flash_ring' acts on it, the others accept and ignore it).  The
+    ``modes`` declaration is load-bearing: resolution refuses any
+    (impl, softmax_impl) pair outside it, and the entry itself must
+    raise on undeclared modes — ``repro.analysis`` audits both sides,
+    and an impl present in the registry WITHOUT metadata (registered by
+    poking ``_ATTENTION`` directly) is an audit failure."""
     _ATTENTION[name] = fn
+    _ATTENTION_INFO[name] = AttentionInfo(
+        modes=frozenset(modes), grad=grad, decode_only=decode_only,
+        needs_mesh=needs_mesh, mesh_safe=mesh_safe, note=note)
+
+
+def attention_info(name: str) -> AttentionInfo:
+    """Declared capabilities of ``name`` (loads providers on demand)."""
+    if name not in _ATTENTION_INFO:
+        _load_attention_providers()
+    try:
+        return _ATTENTION_INFO[name]
+    except KeyError:
+        raise ValueError(f"unknown attention impl {name!r}; "
+                         f"have {sorted(_ATTENTION)}")
+
+
+def attention_impls() -> list[str]:
+    """All registered attention impl names (providers loaded)."""
+    _load_attention_providers()
+    return sorted(_ATTENTION)
 
 
 def set_attention_auto_rule(rule: Callable) -> None:
@@ -186,22 +291,25 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
                       ring_axis: str | None = None) -> str:
     """Resolve 'auto' to a concrete implementation name.
 
-    Softmax-aware: 'dualmode' is a numerics contract, so resolution
+    Softmax-aware and METADATA-DRIVEN: every impl's registration
+    declares the softmax modes it honors (:class:`AttentionInfo`), and
+    'dualmode'/'dualmode_snap' are numerics contracts, so resolution
     guarantees the bit-accurate unit actually executes —
 
-      * 'auto' + 'dualmode': short rows stay 'naive' (whole-row unit);
-        shapes the auto rule would stream go to 'flash_pallas_int' (the
-        unit's one-sweep snapped-max kernel), never a float path; s_q=1
-        decode rows keep 'flash_decode' — its entry runs the snapped int
-        split path, so long-cache dual-mode decode gets the same split-KV
-        parallelism as float; the ring opt-in (below) upgrades to
-        'flash_ring', whose entry folds snapped int hop partials.
-      * explicit 'flash'/'flash_pallas' + 'dualmode': ValueError — these
-        run the float datapath by construction, and silently dropping
-        the unit is exactly the bug this guard exists to prevent.
-      * explicit 'flash_pallas_int'/'flash_pallas_int3' + anything but
-        'dualmode': ValueError (the kernels ARE the unit; they cannot
-        produce float-path words).
+      * 'auto' + a dual-mode contract: short rows stay 'naive'
+        (whole-row unit); shapes the auto rule would stream through a
+        float-only blocked path go to 'flash_pallas_int' (the unit's
+        one-sweep snapped-max kernel) instead; s_q=1 decode rows keep
+        'flash_decode' — its entry runs the snapped int split path, so
+        long-cache dual-mode decode gets the same split-KV parallelism
+        as float; the ring opt-in (below) upgrades to 'flash_ring',
+        whose entry folds snapped int hop partials.
+      * any explicit impl + a softmax mode outside its declared
+        ``modes``: ValueError — e.g. 'flash'/'flash_pallas' (float
+        log-domain by construction) with 'dualmode', or
+        'flash_pallas_int'/'flash_pallas_int3' (the kernels ARE the
+        unit) with 'float'.  Silently dropping a word contract is
+        exactly the bug this guard exists to prevent.
 
     Mesh-aware (opt-in): with a non-empty ``ring_axis``, an 'auto' pick
     of a blocked path — float OR int — upgrades to 'flash_ring' when the
@@ -210,12 +318,17 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
     actually shards.  Configs opt in via ``ModelConfig.ring_axis``; the
     default (``""``) never changes today's resolution.
     """
+    if softmax_impl not in _SOFTMAX:
+        raise ValueError(f"unknown softmax impl {softmax_impl!r}; "
+                         f"have {sorted(_SOFTMAX)}")
     if impl == "auto" and not _ATTENTION_AUTO:
         _load_attention_providers()
     if impl == "auto":
         impl = _ATTENTION_AUTO[0](s_q, t_kv) if _ATTENTION_AUTO else "naive"
-        if softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
-            # blocked dual-mode: the one-sweep snapped-max unit kernel
+        if softmax_impl not in attention_info(impl).modes:
+            # the auto rule picked a float-only blocked path under a
+            # dual-mode word contract: the one-sweep snapped-max unit
+            # kernel streams the same shapes bit-accurately
             impl = "flash_pallas_int"
         if impl in ("flash", "flash_pallas", "flash_pallas_int"):
             n = ring_axis_size(ring_axis)
@@ -223,17 +336,16 @@ def resolve_attention(impl: str, s_q: int, t_kv: int,
                 # the ring entry folds float (m, l, acc) or snapped int
                 # (m, S, acc) hop partials according to softmax_impl
                 impl = "flash_ring"
-    elif softmax_impl == "dualmode" and impl in FLOAT_BLOCKED_ATTENTION:
-        raise ValueError(
-            f"attn_impl={impl!r} runs the float log-domain datapath and "
-            "cannot honor softmax_impl='dualmode' — use attn_impl='auto' "
-            "(routes to 'naive'/'flash_pallas_int'/'flash_decode'), "
-            "'naive', or 'flash_pallas_int'")
-    if impl in INT_ATTENTION and softmax_impl != "dualmode":
-        raise ValueError(
-            f"attn_impl={impl!r} is the bit-accurate dual-mode "
-            f"unit; softmax_impl={softmax_impl!r} would be ignored — set "
-            "softmax_impl='dualmode' (or pick a float attention impl)")
+    else:
+        info = attention_info(impl)        # raises on unknown impls
+        if softmax_impl not in info.modes:
+            raise ValueError(
+                f"attn_impl={impl!r} declares softmax modes "
+                f"{sorted(info.modes)} and cannot honor "
+                f"softmax_impl={softmax_impl!r} — the dualmode word "
+                "contract is never silently dropped; use attn_impl="
+                "'auto' (routes to 'naive'/'flash_pallas_int'/"
+                "'flash_decode'), or an impl declaring the mode")
     if impl not in _ATTENTION:
         _load_attention_providers()
     if impl not in _ATTENTION:

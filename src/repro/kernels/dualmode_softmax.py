@@ -90,6 +90,25 @@ def softmax_pallas(x, *, precision: str = "int", interpret: bool = False):
     return tiling.unpad(tiling.unpad(y, 0, rows), 1, cols)
 
 
+def vmem_plan(rows: int, cols: int):
+    """Static VMEM residency of the whole-row softmax kernel and the
+    elementwise GELU/SiLU kernel (see ``flash_attention.vmem_plan`` for
+    the contract)."""
+    width = tiling.round_up(cols, tiling.LANE)
+    br = tiling.row_block(rows, width)
+    bm, bn = tiling.tile2d(rows, cols)
+    return {
+        "softmax_rows": {
+            "in:x": ((br, width), jnp.float32),
+            "out:y": ((br, width), jnp.float32),
+        },
+        "pair_act": {
+            "in:z": ((bm, bn), jnp.float32),
+            "out:y": ((bm, bn), jnp.float32),
+        },
+    }
+
+
 @functools.partial(jax.jit, static_argnames=("mode", "precision", "interpret"))
 def pair_act_pallas(z, *, mode: str = "gelu", precision: str = "int",
                     interpret: bool = False):

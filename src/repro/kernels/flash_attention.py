@@ -67,6 +67,32 @@ def attention_blockspecs(bq: int, bkv: int, g: int, hd: int, hv: int):
     return in_specs, out_spec
 
 
+def vmem_plan(s_q: int, t_kv: int, hd: int, hv: int, g: int = 1):
+    """Static VMEM residency of the forward float kernel at this shape.
+
+    {call_name: {ref_name: (block_shape, dtype)}} with ``in:``/``out:``/
+    ``scratch:`` key prefixes — ``repro.analysis.vmem`` prices each call
+    as 2x(in+out tiles, double-buffered) + scratch against
+    ``tiling.VMEM_CORE_BUDGET`` and cross-checks the shapes against the
+    traced kernel's ref avals.  Must mirror the pallas_call specs above
+    exactly (the audit fails on drift, not this module).
+    """
+    bq, bkv = tiling.attention_blocks(s_q, t_kv)
+    return {"flash_fwd": {
+        "in:q_pos": ((1, bq), jnp.int32),
+        "in:kv_valid": ((1, bkv), jnp.int32),
+        "in:q": ((1, bq, 1, 1, hd), jnp.float32),
+        "in:k": ((1, bkv, 1, hd), jnp.float32),
+        "in:v": ((1, bkv, 1, hv), jnp.float32),
+        "out:o": ((1, bq, 1, 1, hv), jnp.float32),
+        "out:m": ((1, 1, 1, bq), jnp.float32),
+        "out:l": ((1, 1, 1, bq), jnp.float32),
+        "scratch:m": ((bq, _STATE_LANES), jnp.float32),
+        "scratch:l": ((bq, _STATE_LANES), jnp.float32),
+        "scratch:acc": ((bq, tiling.scratch_lanes(hv)), jnp.float32),
+    }}
+
+
 def rowstat_blockspec(bq: int, g: int):
     """BlockSpec for the (B, K, G, S) per-row statistic arrays (m, l, D)
     on the forward/dq grid layout (b, head, q_tile, *rest)."""
@@ -274,13 +300,16 @@ def _flash_pallas_jit(q, k, v, q_pos, kv_valid, scale, *, causal: bool,
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float", ring_axis=""):
-    if softmax_impl == "dualmode":
+    if softmax_impl != "float":
         raise ValueError(
             "attn_impl='flash_pallas' is the float blocked kernel and "
-            "cannot honor softmax_impl='dualmode' — use 'naive' or "
-            "'flash_pallas_int'")
+            f"cannot honor softmax_impl={softmax_impl!r} (a dualmode word "
+            "contract) — use 'naive' or 'flash_pallas_int'")
     return flash_attention_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
                                   causal=causal, scale=scale)
 
 
-dispatch.register_attention("flash_pallas", _attention_entry)
+dispatch.register_attention(
+    "flash_pallas", _attention_entry,
+    modes=("float",), grad=True,
+    note="Pallas float kernel with custom VJP")

@@ -167,6 +167,39 @@ def _dkdv_body(qpos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, do_ref,
         dv_ref[0, :, 0, :] = dv_acc[:, :hv]
 
 
+def vmem_plan(s_q: int, t_kv: int, hd: int, hv: int, g: int = 1):
+    """Static VMEM residency of the dq and dk/dv backward kernels (see
+    ``flash_attention.vmem_plan`` for the contract)."""
+    bq, bkv = tiling.attention_blocks(s_q, t_kv)
+    common = {
+        "in:q_pos": ((1, bq), jnp.int32),
+        "in:kv_valid": ((1, bkv), jnp.int32),
+        "in:q": ((1, bq, 1, 1, hd), jnp.float32),
+        "in:k": ((1, bkv, 1, hd), jnp.float32),
+        "in:v": ((1, bkv, 1, hv), jnp.float32),
+        "in:o": ((1, bq, 1, 1, hv), jnp.float32),
+        "in:do": ((1, bq, 1, 1, hv), jnp.float32),
+        "in:m": ((1, 1, 1, bq), jnp.float32),
+        "in:l": ((1, 1, 1, bq), jnp.float32),
+    }
+    return {
+        "flash_bwd_dq": dict(
+            common,
+            **{"out:dq": ((1, bq, 1, 1, hd), jnp.float32),
+               "scratch:dq_acc": ((bq, tiling.scratch_lanes(hd)),
+                                  jnp.float32),
+               "scratch:d": ((bq, tiling.scratch_lanes(1)), jnp.float32)}),
+        "flash_bwd_dkdv": dict(
+            common,
+            **{"out:dk": ((1, bkv, 1, hd), jnp.float32),
+               "out:dv": ((1, bkv, 1, hv), jnp.float32),
+               "scratch:dk_acc": ((bkv, tiling.scratch_lanes(hd)),
+                                  jnp.float32),
+               "scratch:dv_acc": ((bkv, tiling.scratch_lanes(hv)),
+                                  jnp.float32)}),
+    }
+
+
 def flash_attention_bwd_pallas(q, k, v, o, m, l, do, *, q_pos, kv_valid,
                                causal: bool, block_q: int, block_kv: int,
                                interpret: bool):

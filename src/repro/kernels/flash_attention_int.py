@@ -396,7 +396,10 @@ def flash_attention_pallas_int3(q, k, v, *, q_pos, kv_valid,
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="dualmode", ring_axis=""):
-    if softmax_impl != "dualmode":
+    # the one-sweep kernel runs on snap words internally, so it honors
+    # BOTH int contracts: 'dualmode' and the snapped monoid
+    # 'dualmode_snap' produce the identical finished words here
+    if softmax_impl not in ("dualmode", "dualmode_snap"):
         raise ValueError(
             "attn_impl='flash_pallas_int' IS the bit-accurate unit; it "
             f"cannot honor softmax_impl={softmax_impl!r} (use 'dualmode', "
@@ -418,5 +421,38 @@ def _attention_entry3(q, k, v, *, q_pos, kv_valid, causal, scale,
                                        scale=scale)
 
 
-dispatch.register_attention("flash_pallas_int", _attention_entry)
-dispatch.register_attention("flash_pallas_int3", _attention_entry3)
+def vmem_plan(s_q: int, t_kv: int, hd: int, hv: int, g: int = 1):
+    """Static VMEM residency of both int kernels (see
+    ``flash_attention.vmem_plan`` for the contract).  The one-sweep plan
+    prices the partial-emitting variant — its extra (m, S) outputs are
+    the worst case."""
+    bq, bkv = tiling.attention_blocks(s_q, t_kv)
+    nb = unit.N_SNAP_BUCKETS
+    common = {
+        "in:q_pos": ((1, bq), jnp.int32),
+        "in:kv_valid": ((1, bkv), jnp.int32),
+        "in:q": ((1, bq, 1, 1, hd), jnp.float32),
+        "in:k": ((1, bkv, 1, hd), jnp.float32),
+        "in:v": ((1, bkv, 1, hv), jnp.float32),
+        "out:o": ((1, bq, 1, 1, hv), jnp.float32),
+        "scratch:m": ((bq, _STATE_LANES), jnp.int32),
+        "scratch:s": ((bq, _STATE_LANES), jnp.int32),
+        "scratch:acc": ((bq, tiling.scratch_lanes(hv)), jnp.float32),
+    }
+    return {
+        "flash_int_onesweep": dict(
+            common,
+            **{"out:part_m": ((1, 1, 1, bq), jnp.int32),
+               "out:part_s": ((1, 1, 1, bq, nb), jnp.int32)}),
+        "flash_int_threesweep": dict(common),
+    }
+
+
+dispatch.register_attention(
+    "flash_pallas_int", _attention_entry,
+    modes=("dualmode", "dualmode_snap"), grad=False,
+    note="snapped one-sweep int kernel (forward-only)")
+dispatch.register_attention(
+    "flash_pallas_int3", _attention_entry3,
+    modes=("dualmode",), grad=False,
+    note="three-sweep int oracle (forward-only)")

@@ -546,9 +546,54 @@ def flash_decode_pallas(q, k, v, *, q_pos, kv_valid, causal: bool = True,
                              block_kv=block_kv, interpret=interpret)
 
 
+def vmem_plan(t_kv: int, hd: int, hv: int, g: int = 1):
+    """Static VMEM residency of the four decode kernels (see
+    ``flash_attention.vmem_plan`` for the contract).  The paged variants
+    tile by the engine's block size instead of the split-KV block; the
+    scalar-prefetched block table lives in SMEM, not VMEM, so it does
+    not appear here."""
+    num_splits = tiling.decode_splits(t_kv)
+    bkv = tiling.decode_kv_block(t_kv, num_splits)
+    bs = tiling.paged_block_size(t_kv)
+    rows = tiling.round_up(g, tiling.SUBLANE)
+    nb = unit.N_SNAP_BUCKETS
+
+    def plan(block, int_mode):
+        p = {
+            "in:q_pos": ((1, 1), jnp.int32),
+            "in:kv_valid": ((1, block), jnp.int32),
+            "in:q": ((1, 1, 1, g, hd), jnp.float32),
+            "in:k": ((1, block, 1, hd), jnp.float32),
+            "in:v": ((1, block, 1, hv), jnp.float32),
+            "out:part_m": ((1, 1, 1, g),
+                           jnp.int32 if int_mode else jnp.float32),
+            "out:part_acc": ((1, 1, 1, g, hv), jnp.float32),
+            "scratch:acc": ((rows, tiling.scratch_lanes(hv)), jnp.float32),
+        }
+        if int_mode:
+            p["out:part_s"] = ((1, 1, 1, g, nb), jnp.int32)
+            p["scratch:m"] = ((rows, tiling.scratch_lanes(1)), jnp.int32)
+            p["scratch:s"] = ((rows, tiling.scratch_lanes(nb)), jnp.int32)
+        else:
+            p["out:part_l"] = ((1, 1, 1, g), jnp.float32)
+            p["scratch:m"] = ((rows, tiling.scratch_lanes(1)), jnp.float32)
+            p["scratch:l"] = ((rows, tiling.scratch_lanes(1)), jnp.float32)
+        return p
+
+    return {
+        "decode_float": plan(bkv, False),
+        "decode_int": plan(bkv, True),
+        "decode_paged_float": plan(bs, False),
+        "decode_paged_int": plan(bs, True),
+    }
+
+
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float", ring_axis=""):
-    impl = "dualmode" if softmax_impl == "dualmode" else "float"
+    # both int contracts route to the snapped int recurrence — a snap
+    # request must never silently fall back to the float path
+    impl = ("dualmode" if softmax_impl in ("dualmode", "dualmode_snap")
+            else "float")
     return flash_decode_pallas(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
                                causal=causal, scale=scale,
                                softmax_impl=impl)
@@ -557,11 +602,16 @@ def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
 def _paged_attention_entry(q, k_pool, v_pool, *, block_tables, q_pos,
                            kv_valid, causal, scale, softmax_impl="float",
                            ring_axis=""):
-    impl = "dualmode" if softmax_impl == "dualmode" else "float"
+    impl = ("dualmode" if softmax_impl in ("dualmode", "dualmode_snap")
+            else "float")
     return flash_decode_paged(q, k_pool, v_pool, block_tables=block_tables,
                               q_pos=q_pos, kv_valid=kv_valid, causal=causal,
                               scale=scale, softmax_impl=impl)
 
 
-dispatch.register_attention("flash_decode", _attention_entry)
+dispatch.register_attention(
+    "flash_decode", _attention_entry,
+    modes=("float", "dualmode", "dualmode_snap"), grad=False,
+    decode_only=True, mesh_safe=False,
+    note="split-KV s_q=1 kernel; single-device (gathers sharded KV)")
 dispatch.register_paged_attention("flash_decode", _paged_attention_entry)

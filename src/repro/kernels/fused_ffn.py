@@ -166,6 +166,28 @@ def _fused_glu_jit(x, wg, wu, *, mode: str, interpret: bool, bm: int,
     return run(x, wg, wu)
 
 
+def vmem_plan(m: int, k: int, f: int):
+    """Static VMEM residency of the fused GLU forward and backward
+    kernels (see ``flash_attention.vmem_plan`` for the contract).  The
+    contraction dim ``k`` is unblocked — the whole (bm, k) x (k, bf)
+    panels are resident, which is what makes this worth auditing."""
+    bm, bf = tiling.matmul_blocks(m, f)
+    fwd = {
+        "in:x": ((bm, k), jnp.float32),
+        "in:wg": ((k, bf), jnp.float32),
+        "in:wu": ((k, bf), jnp.float32),
+        "out:y": ((bm, bf), jnp.float32),
+    }
+    bwd = dict(fwd)
+    del bwd["out:y"]
+    bwd.update({
+        "in:dy": ((bm, bf), jnp.float32),
+        "out:dg": ((bm, bf), jnp.float32),
+        "out:du": ((bm, bf), jnp.float32),
+    })
+    return {"ffn_fwd": fwd, "ffn_bwd": bwd}
+
+
 def _ffn_entry(x, wg, wu, mode):
     return fused_glu_pallas(
         x, wg, wu, mode=mode, interpret=jax.default_backend() != "tpu")

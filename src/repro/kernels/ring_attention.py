@@ -342,13 +342,36 @@ def ring_flash_attention(q, k, v, *, q_pos, kv_valid, mesh=None,
     return fn(qf, k, v, q_pos.astype(jnp.int32), kv_valid)
 
 
+def vmem_plan(s_q: int, t_kv: int, hd: int, hv: int, g: int = 1,
+              n_shards: int = 8):
+    """Static VMEM residency of the ring's per-hop local kernels.
+
+    The ring never launches a kernel of its own — each hop runs the
+    single-device flash kernels on the SHARD-LOCAL extents, so the plan
+    delegates to those modules at (s_q/n, t_kv/n) and namespaces the
+    calls per hop."""
+    from . import flash_attention, flash_attention_int
+    s_loc = max(s_q // n_shards, 1)
+    t_loc = max(t_kv // n_shards, 1)
+    out = {}
+    for mod in (flash_attention, flash_attention_int):
+        for name, plan in mod.vmem_plan(s_loc, t_loc, hd, hv, g).items():
+            out[f"ring_hop_{name}"] = plan
+    return out
+
+
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float", ring_axis="model"):
-    impl = "dualmode" if softmax_impl == "dualmode" else "float"
+    impl = ("dualmode" if softmax_impl in ("dualmode", "dualmode_snap")
+            else "float")
     return ring_flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
                                 causal=causal, scale=scale,
                                 axis=ring_axis or "model",
                                 softmax_impl=impl)
 
 
-dispatch.register_attention("flash_ring", _attention_entry)
+dispatch.register_attention(
+    "flash_ring", _attention_entry,
+    modes=("float", "dualmode", "dualmode_snap"), grad=True,
+    needs_mesh=True, mesh_safe=True,
+    note="shard_map ring over the KV axis; requires an ambient mesh")

@@ -19,6 +19,10 @@ import jax.numpy as jnp
 LANE = 128            # VPU lane width / MXU edge: last-dim block multiple
 SUBLANE = 8           # f32 sublane: second-to-last-dim block multiple
 VMEM_TILE_BUDGET = 2 * 1024 * 1024   # bytes per operand tile
+VMEM_CORE_BUDGET = 16 * 1024 * 1024  # whole-kernel VMEM per TensorCore:
+#   every pallas_call's resident set — double-buffered in/out tiles plus
+#   scratch — must fit this; repro.analysis.vmem audits each kernel's
+#   declared ``vmem_plan()`` against it over the canonical shape grid
 
 
 def cdiv(a: int, b: int) -> int:

@@ -14,12 +14,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
 from repro.configs.base import (ModelConfig, SHAPES, ShapeCell, TrainConfig)
-from repro.distributed import (batch_pspec, cache_pspecs, data_axes,
-                               param_pspecs)
-from repro.models.accounting import (analytic_model_flops, count_params,
-                                     pick_profile)
-from repro.models.transformer import (encoder_apply, init_caches, init_lm,
-                                      lm_apply)
+from repro.distributed import batch_pspec, cache_pspecs, param_pspecs
+from repro.models.accounting import pick_profile
+from repro.models.transformer import encoder_apply, init_caches, init_lm
 from repro.serve.engine import make_decode_step, make_prefill_step
 from repro.train.step import make_train_step, state_pspecs
 

@@ -23,9 +23,9 @@ import jax
 
 from repro.configs import registry
 from repro.launch import hlo_analysis as ha
-from repro.launch.cells import (analytic_model_flops, applicable_cells,
-                                build_cell)
+from repro.launch.cells import applicable_cells, build_cell
 from repro.launch.mesh import make_production_mesh
+from repro.models.accounting import analytic_model_flops
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, *, verbose: bool = True

@@ -38,9 +38,14 @@ _BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
 _COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                 "all-to-all": 1.0, "collective-permute": 1.0}
 
-# ops that move no HBM bytes of their own
+# ops that move no HBM bytes of their own.  NOTE: custom-call is NOT
+# free — on TPU every pallas_call lowers to one, and its kernel streams
+# all operands in and the result out of HBM exactly once (that is the
+# whole point of a flash kernel).  It used to sit in this set, which
+# silently zeroed the HBM bytes of precisely the kernels this module
+# exists to price; cost() now charges it operands + result.
 _FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
-         "after-all", "partition-id", "replica-id", "custom-call",
+         "after-all", "partition-id", "replica-id",
          "bitcast-convert", "opt-barrier"}
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
@@ -212,6 +217,16 @@ class HloProgram:
                     out_n *= d
                 tot["flops"] += 2.0 * out_n
                 continue
+            if base == "custom-call":
+                # a pallas_call kernel: reads every operand, writes the
+                # result, once each (the -done half of an async pair is
+                # the same transfer, already charged at -start)
+                if op.endswith("-done"):
+                    continue
+                _, rb = _shape_elems_bytes(result_txt)
+                tot["bytes"] += rb + float(
+                    sum(self._operand_sizes(line, table)))
+                continue
             if op in _FREE:
                 continue
             tot["bytes"] += self._traffic(line, result_txt, table)
@@ -266,6 +281,31 @@ class HloProgram:
                 _, b = _shape_elems_bytes(table[name])
                 sizes.append(b)
         return sizes
+
+
+def collective_result_bytes(hlo_text: str, op: str = "all-gather"
+                            ) -> list[int]:
+    """Result bytes of every ``op`` instruction in the module, across ALL
+    computations (loop bodies included, unweighted — callers that need
+    trip counts use :meth:`HloProgram.cost`).  Async pairs count once, at
+    the -start half.  This is the shared walker behind the mesh-safety
+    pass in ``repro.analysis``: a post-SPMD all-gather whose result is
+    the full KV cache is the per-chip HBM blowup that pass hunts."""
+    prog = HloProgram(hlo_text)
+    sizes = []
+    for lines in prog.comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            _, result_txt, found = m.groups()
+            if found.endswith("-done"):
+                continue
+            if found.replace("-start", "") != op:
+                continue
+            _, rb = _shape_elems_bytes(result_txt)
+            sizes.append(rb)
+    return sizes
 
 
 def analyze_hlo(hlo_text: str) -> dict[str, float]:

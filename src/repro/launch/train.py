@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import TrainConfig

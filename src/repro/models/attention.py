@@ -7,7 +7,7 @@ the scan-over-layers stack can thread them.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +86,12 @@ dispatch.register_attention(
     lambda q, k, v, *, q_pos, kv_valid, causal, scale,
     softmax_impl="float", ring_axis="": _naive_sdpa(
         q, k, v, q_pos=q_pos, kv_valid=kv_valid, causal=causal, scale=scale,
-        softmax_impl=softmax_impl))
+        softmax_impl=softmax_impl),
+    # whole-row scores through get_softmax: every registered softmax
+    # mode is honored verbatim; a plain einsum graph, so XLA shards it
+    # cleanly against a sequence-sharded KV cache (mesh_safe)
+    modes=("float", "dualmode", "dualmode_snap"), grad=True,
+    mesh_safe=True, note="whole-row scores; honors any softmax_impl")
 
 
 def _sdpa(q, k, v, *, q_pos, kv_valid, softmax_impl, causal=True,

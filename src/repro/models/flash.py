@@ -220,13 +220,17 @@ def _auto_rule(s_q: int, t: int) -> str:
 
 def _attention_entry(q, k, v, *, q_pos, kv_valid, causal, scale,
                      softmax_impl="float", ring_axis=""):
-    if softmax_impl == "dualmode":
+    if softmax_impl != "float":
         raise ValueError(
             "attn_impl='flash' is the float blocked path and cannot honor "
-            "softmax_impl='dualmode' — use 'naive' or 'flash_pallas_int'")
+            f"softmax_impl={softmax_impl!r} (a dualmode word contract) — "
+            "use 'naive' or 'flash_pallas_int'")
     return flash_attention(q, k, v, q_pos=q_pos, kv_valid=kv_valid,
                            causal=causal, scale=scale)
 
 
-dispatch.register_attention("flash", _attention_entry)
+dispatch.register_attention(
+    "flash", _attention_entry,
+    modes=("float",), grad=True,
+    note="pure-JAX blocked online softmax (reference VJP)")
 dispatch.set_attention_auto_rule(_auto_rule)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.activations import get_activation
-from .layers import Params, dense_init, linear, mlp, mlp_init
+from .layers import Params, dense_init, mlp, mlp_init
 
 
 def _ambient_axis_size(axis) -> int:

@@ -12,7 +12,6 @@ make — this is the TPU/XLA-native expression of it).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def chunked_time_scan(step, h0, xs, chunk: int = 64):

@@ -113,3 +113,63 @@ ENTRY %main (a: f32[4]) -> f32[4] {
     # 7 trips x one 16-byte all-reduce x ring factor 2
     assert a["collective_count"] == 7
     assert a["collective_wire_bytes"] == 7 * 16 * 2
+
+
+def test_custom_call_charges_hbm_bytes():
+    """Regression: custom-call (a TPU pallas_call) used to sit in the
+    byte-free set, zeroing the HBM traffic of exactly the kernels the
+    analyzer exists to price.  A flash-style custom-call must charge its
+    operands + result, and the -done half of an async pair must not
+    double-charge."""
+    txt = """
+HloModule m
+
+ENTRY %main (q: f32[128,64], k: f32[1024,64], v: f32[1024,64]) -> f32[128,64] {
+  %q = f32[128,64]{1,0} parameter(0)
+  %k = f32[1024,64]{1,0} parameter(1)
+  %v = f32[1024,64]{1,0} parameter(2)
+  ROOT %o = f32[128,64]{1,0} custom-call(%q, %k, %v), custom_call_target="tpu_custom_call"
+}
+"""
+    a = analyze_hlo(txt)
+    expected = 4 * (128 * 64 + 1024 * 64 + 1024 * 64 + 128 * 64)
+    assert a["bytes_accessed"] == expected, a
+
+    async_txt = """
+HloModule m
+
+ENTRY %main (x: f32[256,256]) -> f32[256,256] {
+  %x = f32[256,256]{1,0} parameter(0)
+  %s = f32[256,256]{1,0} custom-call-start(%x), custom_call_target="tpu_custom_call"
+  ROOT %d = f32[256,256]{1,0} custom-call-done(%s)
+}
+"""
+    a2 = analyze_hlo(async_txt)
+    assert a2["bytes_accessed"] == 4 * 256 * 256 * 2, a2  # start only
+
+
+def test_collective_result_bytes_walks_all_computations():
+    """The mesh-safety walker: every all-gather result in the module
+    (loop bodies included), async pairs counted once at -start."""
+    from repro.launch.hlo_analysis import collective_result_bytes
+    txt = """
+HloModule m
+
+%body (p: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+  %p = (s32[], f32[8,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,64]{1,0} get-tuple-element(%p), index=1
+  %g = f32[64,64]{1,0} all-gather(%x), replica_groups={}, dimensions={0}
+  %r = f32[8,64]{1,0} slice(%g), slice={[0:8], [0:64]}
+  ROOT %t = (s32[], f32[8,64]) tuple(%i, %r)
+}
+
+ENTRY %main (a: f32[8,64]) -> f32[64,64] {
+  %a = f32[8,64]{1,0} parameter(0)
+  %s = f32[64,64]{1,0} all-gather-start(%a), replica_groups={}, dimensions={0}
+  ROOT %d = f32[64,64]{1,0} all-gather-done(%s)
+}
+"""
+    sizes = collective_result_bytes(txt, "all-gather")
+    assert sorted(sizes) == [64 * 64 * 4, 64 * 64 * 4]
+    assert collective_result_bytes(txt, "all-reduce") == []
