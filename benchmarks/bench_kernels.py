@@ -576,6 +576,120 @@ def main_serve(json_path: str | None = None, *, n_requests: int = 12,
         print(f"# wrote {os.path.abspath(json_path)}")
 
 
+def main_block(json_path: str | None = None, *, m: int = 1024,
+               d: int = 512, f: int = 2048, kind: str = "rms",
+               eps: float = 1e-6) -> None:
+    """Block norm-seam shoot-out: each fused Pallas seam
+    (kernels/fused_norm.py) vs its dense two-kernel composition, with the
+    analytic HBM-bytes-per-block saving recorded per seam.
+
+    The saving is analytic f32 stream accounting of the intermediate the
+    fusion never materializes in HBM:
+
+      * norm1 -> QKV prologue: dense writes, then re-reads, the
+        normalized activations h (m x d) -> 2*m*d*4 bytes saved;
+      * residual-add + norm2 epilogue: dense re-reads the residual sum
+        it just wrote before normalizing -> m*d*4 saved;
+      * norm2 -> gate/up GLU prologue: same stream shape as the QKV
+        seam -> 2*m*d*4 saved.
+
+    Off-TPU the fused timings are interpret mode — a correctness
+    checkpoint, not a speed claim; the parity columns are the real
+    content there.  Records BENCH_block.json, validated by
+    ``analysis.schema.BLOCK_SPEC``/``BLOCK_RULES``.
+    """
+    from repro.kernels import datapath as dp
+    from repro.kernels.fused_norm import (fused_norm_glu, fused_norm_linear,
+                                          fused_residual_norm)
+
+    rng = np.random.default_rng(0)
+    interp = jax.default_backend() != "tpu"
+    itemsize = 4
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    g = jnp.asarray(1.0 + 0.1 * rng.normal(size=(d,)), jnp.float32)
+    b = (jnp.asarray(0.1 * rng.normal(size=(d,)), jnp.float32)
+         if kind == "layer" else None)
+    w_qkv = jnp.asarray(rng.normal(size=(d, 3 * d)) / d ** 0.5, jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(d, f)) / d ** 0.5, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(d, f)) / d ** 0.5, jnp.float32)
+
+    def norm_dense(t):
+        return (dp.rmsnorm(t, g, eps) if kind == "rms"
+                else dp.layernorm(t, g, b, eps))
+
+    md = m * d * itemsize
+    impls = {
+        "attn_qkv_prologue": (
+            jax.jit(lambda x_: norm_dense(x_) @ w_qkv),
+            lambda x_: fused_norm_linear(x_, g, b, w_qkv, kind=kind,
+                                         eps=eps, interpret=interp),
+            (x,),
+            # read x, write+read h, read w, write y  /  h never lands
+            3 * md + (d * 3 * d + m * 3 * d) * itemsize, 2 * md),
+        "attn_out_epilogue": (
+            jax.jit(lambda x_, r_: (x_ + r_, norm_dense(x_ + r_))),
+            lambda x_, r_: fused_residual_norm(x_, r_, g, b, kind=kind,
+                                               eps=eps, interpret=interp),
+            (x, r),
+            # read x+r, write x_new, re-read x_new, write h
+            5 * md, md),
+        "ffn_glu_prologue": (
+            jax.jit(lambda x_: dp.pair_act(norm_dense(x_) @ wg, "gelu")
+                    * (norm_dense(x_) @ wu)),
+            lambda x_: fused_norm_glu(x_, g, b, wg, wu, kind=kind,
+                                      eps=eps, mode="gelu",
+                                      interpret=interp),
+            (x,),
+            3 * md + (2 * d * f + m * f) * itemsize, 2 * md),
+    }
+    results = {"backend": jax.default_backend(), "interpret": interp,
+               "shape": {"m": m, "d": d, "f": f}, "norm_kind": kind,
+               "seams": {}}
+    for name, (dense_fn, fused_fn, args, dense_bytes, saved) in impls.items():
+        out_d = jax.tree_util.tree_leaves(
+            jax.block_until_ready(dense_fn(*args)))
+        out_f = jax.tree_util.tree_leaves(
+            jax.block_until_ready(fused_fn(*args)))
+        parity = max(float(jnp.abs(a - b_).max())
+                     for a, b_ in zip(out_f, out_d))
+        us_d = time_fn(dense_fn, *args, iters=5)
+        us_f = time_fn(fused_fn, *args, iters=5)
+        results["seams"][name] = {
+            "dense_hbm_bytes": dense_bytes,
+            "fused_hbm_bytes": dense_bytes - saved,
+            "saved_bytes": saved,
+            "us_dense": us_d, "us_fused": us_f,
+            "parity_max_abs": parity}
+        emit(f"kernels/block_{name}_us", us_f,
+             f"dense={us_d:.1f}us saved={saved}B parity={parity:.2e}")
+    dense_total = sum(s["dense_hbm_bytes"]
+                      for s in results["seams"].values())
+    saved_total = sum(s["saved_bytes"] for s in results["seams"].values())
+    results["block_total"] = {
+        "dense_hbm_bytes": dense_total,
+        "fused_hbm_bytes": dense_total - saved_total,
+        "saved_bytes": saved_total,
+        "saved_frac": saved_total / dense_total}
+    emit("kernels/block_hbm_saved_pct",
+         results["block_total"]["saved_frac"] * 100,
+         f"{saved_total} of {dense_total} bytes per block (m={m} d={d})")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(results, fh, indent=2)
+        print(f"# wrote {os.path.abspath(json_path)}")
+
+
+def check_block_schema(json_path: str) -> None:
+    """BENCH_block.json contract: every fused seam records a positive
+    HBM-bytes saving consistent with its dense/fused accounting, the
+    epilogue holds the pinned 1e-5 dense-contract parity, and the matmul
+    prologues stay within small-ULP reassociation (5e-5)."""
+    from repro.analysis import schema
+    schema.check_block_json(json_path)
+    print(f"# BENCH_block schema OK: {json_path}")
+
+
 def check_serve_schema(json_path: str) -> None:
     """BENCH_serve.json contract: zero cache copies on paged admission,
     strictly more concurrent slots than contiguous at equal HBM, and
@@ -621,6 +735,16 @@ if __name__ == "__main__":
             main_serve(path)
         check_serve_schema(path)
         sys.exit(0)
+    if "--block-only" in sys.argv:
+        i = sys.argv.index("--block-only")
+        path = (sys.argv[i + 1] if len(sys.argv) > i + 1
+                else "BENCH_block.json")
+        if "--quick" in sys.argv:   # CI smoke: small shapes, same schema
+            main_block(path, m=128, d=128, f=256)
+        else:
+            main_block(path)
+        check_block_schema(path)
+        sys.exit(0)
     if "--decode-only" in sys.argv:
         i = sys.argv.index("--decode-only")
         path = (sys.argv[i + 1] if len(sys.argv) > i + 1
@@ -640,3 +764,4 @@ if __name__ == "__main__":
     main_flash_ring("BENCH_flash_ring.json")
     main_decode("BENCH_decode.json")
     main_serve("BENCH_serve.json")
+    main_block("BENCH_block.json")

@@ -30,7 +30,7 @@ import os
 import sys
 
 PASSES = ("int_purity", "vmem", "mesh_safety", "dispatch_table")
-FIXTURES = ("int_purity", "vmem", "mesh", "dispatch")
+FIXTURES = ("int_purity", "vmem", "mesh", "dispatch", "norm")
 
 
 def _ensure_devices(n: int = 8) -> None:
@@ -120,11 +120,28 @@ def _fixture_dispatch() -> dict:
         dispatch._ATTENTION.pop("rogue", None)
 
 
+def _fixture_norm() -> dict:
+    """A fused-norm provider registered with only ONE of the three
+    NORM_SEAMS callables — the half-fused block the provider contract
+    exists to refuse."""
+    from repro.kernels import dispatch
+
+    from . import dispatch_table
+
+    dispatch.get_norm("fused_pallas")    # real providers loaded first
+    dispatch._NORM["rogue"] = {"residual_norm": lambda *a, **k: None}
+    try:
+        return dispatch_table.run()
+    finally:
+        dispatch._NORM.pop("rogue", None)
+
+
 _FIXTURE_RUNNERS = {
     "int_purity": ("int_purity", _fixture_int_purity),
     "vmem": ("vmem", _fixture_vmem),
     "mesh": ("mesh_safety", _fixture_mesh),
     "dispatch": ("dispatch_table", _fixture_dispatch),
+    "norm": ("dispatch_table", _fixture_norm),
 }
 
 

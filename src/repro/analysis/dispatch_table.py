@@ -108,11 +108,53 @@ def enumerate_matrix() -> dict:
                 auto[(phase, mesh_name, mode)] = out.removeprefix("-> ")
 
     problems.extend(_entry_refusals())
+    norm_problems, norm_cells = _norm_contract()
+    problems.extend(norm_problems)
     cells = (len(explicit) * len(grid.MODES) * len(grid.PHASES)
              * len(grid.MESHES)
-             + len(grid.PHASES) * len(grid.MESHES) * len(grid.MODES))
+             + len(grid.PHASES) * len(grid.MESHES) * len(grid.MODES)
+             + norm_cells)
     return {"explicit": explicit, "auto": auto, "problems": problems,
             "cells": cells}
+
+
+def _norm_contract() -> tuple[list[str], int]:
+    """The fused-norm provider contract, enumerated through the live
+    registry: every registered provider must carry ALL of
+    ``dispatch.NORM_SEAMS`` as callables (a provider that fuses only
+    some seams would silently fall back mid-block), and every norm/ffn
+    impl string — explicit and 'auto' — must resolve to a registered
+    name.  Returns (problems, cells_checked)."""
+    from repro.kernels import dispatch
+
+    problems: list[str] = []
+    cells = 0
+    dispatch.get_norm("fused_pallas")    # load the fused provider
+    for name in sorted(dispatch._NORM):
+        prov = dispatch._NORM[name]
+        if prov is None:
+            continue                     # 'dense' = the unfused path
+        for seam in dispatch.NORM_SEAMS:
+            cells += 1
+            if not callable(prov.get(seam)):
+                problems.append(
+                    f"norm provider {name!r} is missing seam {seam!r} — "
+                    "a provider must carry every NORM_SEAMS entry or the "
+                    "block would silently fall half-fused")
+    for impl in sorted(dispatch._NORM) + ["auto"]:
+        cells += 1
+        resolved = dispatch.resolve_norm(impl)
+        if resolved not in dispatch._NORM:
+            problems.append(
+                f"norm_impl {impl!r} resolves to unregistered "
+                f"{resolved!r}")
+    for impl in sorted(dispatch._FFN) + ["auto"]:
+        cells += 1
+        try:
+            dispatch.get_ffn(dispatch.resolve_ffn(impl))
+        except ValueError as exc:
+            problems.append(f"ffn_impl {impl!r} fails to resolve: {exc}")
+    return problems, cells
 
 
 def _entry_refusals() -> list[str]:
@@ -207,6 +249,26 @@ def generate_tables() -> str:
                      for m in grid.MODES]
             lines.append(f"| {phase} ({s_q}x{t_kv}) | {mesh_name} "
                          f"| {cells[0]} | {cells[1]} | {cells[2]} |")
+    lines += [
+        "",
+        "`norm_impl` providers — a fused provider must carry ALL three",
+        "block seams (``dispatch.NORM_SEAMS``); 'unfused' rows run the",
+        "reference norms in models/layers.py.  'auto' resolves to",
+        "'fused_pallas' on TPU and 'dense' elsewhere, for `norm_impl`",
+        "and `ffn_impl` alike (dispatch.resolve_norm / resolve_ffn).",
+        "",
+        "| norm_impl | residual_norm | norm_linear | norm_glu |",
+        "|---|---|---|---|",
+    ]
+    dispatch.get_norm("fused_pallas")    # load the fused provider
+    for name in sorted(dispatch._NORM):
+        prov = dispatch._NORM[name]
+        if prov is None:
+            seam_cells = ["unfused"] * len(dispatch.NORM_SEAMS)
+        else:
+            seam_cells = ["ok" if callable(prov.get(s)) else "MISSING"
+                          for s in dispatch.NORM_SEAMS]
+        lines.append(f"| {name} | " + " | ".join(seam_cells) + " |")
     return "\n".join(lines)
 
 

@@ -39,9 +39,10 @@ HEAD = {"hd": 8, "hv": 8, "g": 2}
 # kernels take their real multi-tile grid (bq=128, bkv=256).
 TRACE_SQ, TRACE_T = 256, 256
 
-# FFN / row-softmax cells for the vmem pass
+# FFN / row-softmax / norm-seam cells for the vmem pass
 FFN_CELL = {"m": 4096, "k": 1024, "f": 4096}
 SOFTMAX_CELL = {"rows": 4096, "cols": 4096}
+NORM_CELL = {"m": 4096, "d": 1024, "f": 4096}
 
 
 def attention_cells() -> list[dict]:

@@ -267,6 +267,14 @@ def iter_paths():
            (x,), {})
     yield ("gelu:dualmode", unit.gelu_dualmode, (x,), {})
     yield ("silu:dualmode", unit.silu_dualmode, (x,), {})
+    # the norm residents: rsqrt is FORBIDDEN on the lattice, so these
+    # paths prove the exp2(-0.5*log2(.)) shift/add route actually holds
+    g = jnp.ones((128,), jnp.float32)
+    b = jnp.zeros((128,), jnp.float32)
+    yield ("rmsnorm:dualmode", unit.rmsnorm_dualmode, (x, g),
+           {"eps": 1e-6})
+    yield ("layernorm:dualmode", unit.layernorm_dualmode, (x, g, b),
+           {"eps": 1e-6})
     yield ("softmax_pallas:int",
            lambda a: dualmode_softmax.softmax_pallas(
                a, precision="int", interpret=True), (x,), {})

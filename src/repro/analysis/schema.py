@@ -193,6 +193,53 @@ SERVE_RULES = [
      and d["mixed_phase"]["tokens_per_s"] > 0),
 ]
 
+_SEAM_SPEC = {"dense_hbm_bytes": int, "fused_hbm_bytes": int,
+              "saved_bytes": int, "us_dense": NUM, "us_fused": NUM,
+              "parity_max_abs": NUM}
+BLOCK_SPEC = {
+    "backend": str,
+    "interpret": bool,
+    "shape": {"m": int, "d": int, "f": int},
+    "norm_kind": ("in", {"rms", "layer"}),
+    "seams": {"attn_qkv_prologue": _SEAM_SPEC,
+              "attn_out_epilogue": _SEAM_SPEC,
+              "ffn_glu_prologue": _SEAM_SPEC},
+    "block_total": {"dense_hbm_bytes": int, "fused_hbm_bytes": int,
+                    "saved_bytes": int, "saved_frac": NUM},
+}
+# parity bars: the residual-add epilogue is pure elementwise after the
+# norm, so it holds the pinned 1e-5 dense-contract bar; the matmul
+# prologues reassociate the contraction inside the kernel, so their bar
+# is the small-ULP 5e-5 (same reasoning as the fused-FFN parity bar)
+BLOCK_RULES = [
+    ("every fused seam saves HBM traffic (saved_bytes > 0)",
+     lambda d: all(s["saved_bytes"] > 0 for s in d["seams"].values())),
+    ("saved_bytes = dense - fused per seam",
+     lambda d: all(s["saved_bytes"]
+                   == s["dense_hbm_bytes"] - s["fused_hbm_bytes"]
+                   for s in d["seams"].values())),
+    ("residual+norm epilogue holds the pinned dense contract (<= 1e-5)",
+     lambda d: float(d["seams"]["attn_out_epilogue"]["parity_max_abs"])
+     <= 1e-5),
+    ("matmul prologues within small-ULP reassociation (<= 5e-5)",
+     lambda d: all(float(d["seams"][s]["parity_max_abs"]) <= 5e-5
+                   for s in ("attn_qkv_prologue", "ffn_glu_prologue"))),
+    ("block totals are the sum of the seam rows",
+     lambda d: d["block_total"]["saved_bytes"]
+     == sum(s["saved_bytes"] for s in d["seams"].values())
+     and d["block_total"]["dense_hbm_bytes"]
+     == sum(s["dense_hbm_bytes"] for s in d["seams"].values())),
+    ("saved fraction consistent and positive",
+     lambda d: 0.0 < float(d["block_total"]["saved_frac"]) < 1.0),
+]
+
+
+def check_block_json(path: str) -> dict:
+    """Validate BENCH_block.json (the per-seam HBM-traffic artifact the
+    block bench writes) through the shared engine."""
+    return validate_file(path, BLOCK_SPEC, BLOCK_RULES, "BENCH_block.json")
+
+
 # ---------------------------------------------------------------------------
 # AUDIT.json (the auditor's own artifact goes through the same engine)
 # ---------------------------------------------------------------------------

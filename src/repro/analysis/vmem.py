@@ -44,7 +44,8 @@ def iter_cells():
     """(kernel_module_name, call_name, cell_desc, plan) over the grid."""
     from repro.kernels import (dualmode_softmax, flash_attention,
                                flash_attention_bwd, flash_attention_int,
-                               flash_decode, fused_ffn, ring_attention)
+                               flash_decode, fused_ffn, fused_norm,
+                               ring_attention)
 
     from . import grid
 
@@ -70,6 +71,9 @@ def iter_cells():
             s["rows"], s["cols"]).items():
         yield "dualmode_softmax", call, \
             f"rows={s['rows']} cols={s['cols']}", plan
+    n = grid.NORM_CELL
+    for call, plan in fused_norm.vmem_plan(n["m"], n["d"], n["f"]).items():
+        yield "fused_norm", call, f"m={n['m']} d={n['d']} f={n['f']}", plan
 
 
 # ---------------------------------------------------------------------------

@@ -104,6 +104,11 @@ class ModelConfig:
     # | auto (resolves to fused_pallas on TPU, dense elsewhere — explicit
     # strings are never rewritten; see kernels/dispatch.resolve_ffn)
     ffn_impl: str = "dense"
+    # norm-seam execution: dense | fused_pallas (kernels/fused_norm.py:
+    # residual-add+norm epilogues and norm->matmul prologues) | auto
+    # (fused_pallas on TPU, dense elsewhere — dispatch.resolve_norm).
+    # Fused seams match the dense contract to <=1e-5, not bitwise.
+    norm_impl: str = "dense"
     moe_dispatch: str = "sort"      # sort | dense
     # modality stubs (assignment: frontend is a stub, backbone is real)
     enc_layers: int = 0       # whisper encoder depth

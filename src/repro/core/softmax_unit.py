@@ -461,6 +461,115 @@ def softmax_snap_blocked(x_fx, block: int, guard_shift: int | None = None):
     return p.astype(jnp.float32) * snap_scale_f32(d) / l.astype(jnp.float32)
 
 
+# --- normalization mode (SOLE-style reuse of the exp/log datapath) ----------
+#
+# RMSNorm/LayerNorm need one rsqrt per row; on this unit that is one more
+# log-domain traversal — NO divider, NO square-rooter:
+#
+#     xhat_i = x_i / sqrt(ms) = sign(x_i) * 2**(log2|x_i| - log2(ms)/2)
+#
+# i.e. the row statistic enters as HALF its log (an arithmetic shift),
+# and the per-element normalize is the same log2 -> subtract -> exp2
+# pipeline Eq. (10) runs for softmax.  SOLE's "guaranteed normalization"
+# maps onto the word lattice as: the mean-square word is clamped >= 1
+# (so the log never sees zero), the output saturates at the S5.10 rails,
+# and the mean divide is a reciprocal MULTIPLY by the static ROM word
+# round(2**15 / n) — integer division never appears in the datapath
+# (audited: analysis/int_purity forbids div/rsqrt/sqrt on int paths).
+#
+# Gain/bias stay OUT of the int unit — the float wrappers apply them in
+# f32 after dequantize, mirroring the dense contract's single-downcast
+# op order (models/layers.py).
+
+def _exp2_signed_to_in(w):
+    """2**w (w @ 2**-T_FRAC, ANY sign) -> word @ 2**-IN_FRAC, saturating.
+
+    Unlike :func:`_exp2_int` (t <= 0 only) the normalization exponent
+    w = log2|x| - log2(ms)/2 can be positive (elements above the RMS).
+    Split w = u + v as usual; the 2**u shift runs against the 5-bit
+    headroom of the target scale and saturates at the S5.10 rail IN_MAX
+    — the unit's output saturation stage.
+    """
+    u = w >> T_FRAC
+    v = w - (u << T_FRAC)
+    p = exp2_frac_int(v)                       # [1,2) @ 2**-EXP_FRAC
+    # rescale 2**-EXP_FRAC -> 2**-IN_FRAC is >> 4; pre-shift by 5 keeps
+    # the left-shift cases (u > 4) inside int32, then saturate
+    shift = (EXP_FRAC - IN_FRAC) - u
+    return jnp.minimum(sat_rshift(p << 5, shift + 5), I32(IN_MAX))
+
+
+def _log2_ms_int(x, n: int, guard_shift: int):
+    """log2 of the row mean square of ``x`` (S5.10) @ 2**-T_FRAC.
+
+    Sum of squares with a guard shift (x*x is at 2**-2*IN_FRAC and <=
+    2**30 per element, so rows up to 2**(guard_shift+1) elements cannot
+    overflow int32), then the mean is a log-domain SUBTRACTION of the
+    static word round(log2(n) * 2**T_FRAC) — no divide.
+    """
+    xx = (x * x) >> guard_shift                # @ 2**-(2*IN_FRAC - guard)
+    s2 = jnp.maximum(jnp.sum(xx, axis=-1, keepdims=True), 1)
+    log2n_q = int(round(math.log2(n) * (1 << T_FRAC)))
+    return _log2_int(s2, 2 * IN_FRAC - guard_shift) - I32(log2n_q)
+
+
+def rmsnorm_int(x_fx, guard_shift: int | None = None):
+    """Normalization mode: x / sqrt(mean(x^2)) over the last axis.
+
+    x_fx int32 @ S5.10 -> int32 @ S5.10 (saturating).  Entirely on the
+    unit's datapath: per-element log2, one row log2, shifts, one exp2.
+    Zero words stay exactly zero.
+    """
+    n = x_fx.shape[-1]
+    if guard_shift is None:
+        guard_shift = max(0, n.bit_length() - 1)
+    x = x_fx.astype(I32)
+    t_ms = _log2_ms_int(x, n, guard_shift)
+    a = jnp.abs(x)
+    t_x = _log2_int(jnp.maximum(a, 1), IN_FRAC)
+    w = t_x - (t_ms >> 1)                      # log2 |xhat|
+    y = _exp2_signed_to_in(w)
+    return jnp.where(a == 0, 0, jnp.sign(x) * y)
+
+
+def layernorm_int(x_fx, guard_shift: int | None = None):
+    """Normalization mode with centering: (x - mu) / sqrt(var(x)).
+
+    The mean is the ONE place a true divide-by-n appears; on the unit it
+    is a multiply by the static reciprocal ROM word round(2**15 / n)
+    (exact to the output lattice for the n of every assigned arch), then
+    the centered row reuses the rmsnorm datapath — var(x) IS the mean
+    square of the centered words.
+    """
+    n = x_fx.shape[-1]
+    x = x_fx.astype(I32)
+    recip_q = int(round((1 << 15) / n))
+    s1 = jnp.sum(x, axis=-1, keepdims=True)    # |s1| <= n * 2**15
+    mu = (s1 * I32(recip_q)) >> 15             # @ 2**-IN_FRAC
+    xc = jnp.clip(x - mu, IN_MIN, IN_MAX)
+    return rmsnorm_int(xc, guard_shift=guard_shift)
+
+
+def rmsnorm_dualmode(x, g, eps: float):
+    """float in/out RMSNorm through the int unit; ``g`` applied in f32.
+
+    ``eps`` is accepted for signature parity with the float home
+    (``kernels/datapath.rmsnorm``) but plays no role on the word lattice
+    — the unit's guaranteed normalization (the >=1 mean-square clamp and
+    the S5.10 output rails) is what bounds the zero/overflow cases.
+    """
+    del eps
+    y = dequantize(rmsnorm_int(quantize(x)), IN_FRAC)
+    return y * g.astype(jnp.float32)
+
+
+def layernorm_dualmode(x, g, b, eps: float):
+    """float in/out LayerNorm through the int unit; g/b applied in f32."""
+    del eps
+    y = dequantize(layernorm_int(quantize(x)), IN_FRAC)
+    return y * g.astype(jnp.float32) + b.astype(jnp.float32)
+
+
 # --- float wrappers (quantize -> int unit -> dequantize) --------------------
 def softmax_dualmode(x, axis: int = -1):
     """float in/out softmax through the bit-accurate unit (normal mode)."""

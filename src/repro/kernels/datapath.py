@@ -194,6 +194,104 @@ def online_softmax_merge(part_a, part_b):
     return m, l_a * c_a + l_b * c_b, acc_a * c_a + acc_b * c_b
 
 
+# --------------------------------------------------------------------------
+# normalization (third resident of the unit — SOLE/Choi co-design)
+# --------------------------------------------------------------------------
+#
+# RMSNorm/LayerNorm join softmax and GELU on the shared datapath: the
+# 1/sqrt(v) each needs is one more log-domain traversal of the same unit,
+# rsqrt(v) = 2**(-0.5 * log2(v)) — one log tap, one halving shift, one
+# exponential, exactly the SOLE reuse.  These are the SINGLE float
+# definitions; ``models/layers.py`` wraps them (downcast at the very end)
+# and the fused Pallas seams (``kernels/fused_norm.py``) inline them as
+# epilogue/prologue bodies.
+#
+# Numeric contract (what every fused seam is pinned against):
+#   * statistics AND the gain/bias application happen in f32; the caller
+#     performs exactly one downcast, on the finished f32 result;
+#   * one-pass sums (sum of squares; LayerNorm var = E[x^2] - E[x]^2,
+#     clamped at 0) so Pallas bodies need a single sweep of the row;
+#   * ``eps`` has NO default — call sites must thread cfg.norm_eps.
+
+def _rsqrt_log2(v):
+    """rsqrt through the unit: 2**(-0.5 * log2(v)).  v must be > 0."""
+    return jnp.exp2(-0.5 * jnp.log2(v))
+
+
+def rmsnorm(x, g, eps):
+    """RMSNorm, f32 in/out: x * rsqrt(mean(x^2) + eps) * g.
+
+    Returns f32 regardless of input dtype — the caller owns the single
+    final downcast.  ``g`` broadcasts over the leading axes.
+    """
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    r = _rsqrt_log2(ms + eps)
+    return x32 * r * g.astype(jnp.float32)
+
+
+def layernorm(x, g, b, eps):
+    """LayerNorm, f32 in/out, one-pass moments (var = E[x^2] - E[x]^2)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.maximum(jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+                      - jnp.square(mu), 0.0)
+    r = _rsqrt_log2(var + eps)
+    return (x32 - mu) * r * g.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+def rmsnorm_vjp(x, g, eps, dy):
+    """VJP of :func:`rmsnorm` wrt (x, g) — the single gradient home.
+
+    With r = rsqrt(ms + eps) and w_i = g_i * dy_i:
+
+        dx_i = r * w_i - x_i * r^3 * mean(x * w)
+        dg-hat_i = dy_i * x_i * r        (callers reduce over leading axes)
+
+    All f32; ``dy`` is upcast.  Returns (dx, dg_hat).
+    """
+    x32 = x.astype(jnp.float32)
+    dy32 = dy.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    r = _rsqrt_log2(ms + eps)
+    w = g.astype(jnp.float32) * dy32
+    dx = r * w - x32 * (r * r * r) * jnp.mean(
+        x32 * w, axis=-1, keepdims=True)
+    return dx, dy32 * x32 * r
+
+
+def layernorm_vjp(x, g, eps, dy):
+    """VJP of :func:`layernorm` wrt (x, g, b).
+
+    With xhat = (x - mu) * r and w_i = g_i * dy_i:
+
+        dx = r * (w - mean(w) - xhat * mean(w * xhat))
+        dg-hat = dy * xhat,  db-hat = dy   (callers reduce leading axes)
+
+    Returns (dx, dg_hat, db_hat), all f32.
+    """
+    x32 = x.astype(jnp.float32)
+    dy32 = dy.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.maximum(jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+                      - jnp.square(mu), 0.0)
+    r = _rsqrt_log2(var + eps)
+    xhat = (x32 - mu) * r
+    w = g.astype(jnp.float32) * dy32
+    dx = r * (w - jnp.mean(w, axis=-1, keepdims=True)
+              - xhat * jnp.mean(w * xhat, axis=-1, keepdims=True))
+    return dx, dy32 * xhat, dy32
+
+
+def norm_apply(x, g, b, *, kind: str, eps: float):
+    """rms/layer selector — the fused kernels' epilogue body."""
+    if kind == "rms":
+        return rmsnorm(x, g, eps)
+    if kind == "layer":
+        return layernorm(x, g, b, eps)
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
 def online_softmax_merge_n(m, l, acc, axis: int = 0):
     """Vectorized n-way fold of partial states stacked along ``axis``.
 

@@ -59,6 +59,17 @@ is backend-independent.
 | prefill (4096x4096) | ring8 | flash_ring | flash_ring | flash_ring |
 | decode (1x65536) | none | flash_decode | flash_decode | flash_decode |
 | decode (1x65536) | ring8 | naive | naive | naive |
+
+`norm_impl` providers — a fused provider must carry ALL three
+block seams (``dispatch.NORM_SEAMS``); 'unfused' rows run the
+reference norms in models/layers.py.  'auto' resolves to
+'fused_pallas' on TPU and 'dense' elsewhere, for `norm_impl`
+and `ffn_impl` alike (dispatch.resolve_norm / resolve_ffn).
+
+| norm_impl | residual_norm | norm_linear | norm_glu |
+|---|---|---|---|
+| dense | unfused | unfused | unfused |
+| fused_pallas | ok | ok | ok |
 [dispatch-table:end]
 
 Resolution is also shape- and backend-aware through the 'auto' rule
@@ -429,3 +440,43 @@ def get_ffn(impl: str) -> Callable | None:
         return _FFN[impl]
     except KeyError:
         raise ValueError(f"unknown ffn impl {impl!r}; have {sorted(_FFN)}")
+
+
+# --------------------------------------------------------------------------
+# Norm (fused norm-seam execution strategy)
+# --------------------------------------------------------------------------
+#
+# A norm provider is a dict of the block's three fusable seams —
+#   'residual_norm' (x, r, g, b, kind, eps)  -> (x + r, norm(x + r))
+#   'norm_linear'   (x, g, b, w, kind, eps)  -> norm(x) @ w
+#   'norm_glu'      (x, g, b, wg, wu, kind, eps, mode) -> act(h@wg)*(h@wu)
+# — registered as one unit so the dispatch-table auditor can check the
+# provider contract (all three seams present and callable).
+
+NORM_SEAMS = ("residual_norm", "norm_linear", "norm_glu")
+
+_NORM: dict[str, dict[str, Callable] | None] = {"dense": None}
+
+
+def register_norm(name: str, seams: dict[str, Callable]) -> None:
+    """Register a fused-norm provider: a dict keyed by NORM_SEAMS."""
+    _NORM[name] = seams
+
+
+def resolve_norm(impl: str) -> str:
+    """Resolve ``norm_impl='auto'`` — same policy as :func:`resolve_ffn`:
+    'fused_pallas' on TPU, 'dense' elsewhere; explicit strings pass
+    through untouched."""
+    if impl == "auto":
+        return "fused_pallas" if jax.default_backend() == "tpu" else "dense"
+    return impl
+
+
+def get_norm(impl: str) -> dict[str, Callable] | None:
+    """None means the plain (unfused) norms; otherwise the seam dict."""
+    if impl not in _NORM and impl == "fused_pallas":
+        import repro.kernels.fused_norm  # noqa: F401  (self-registers)
+    try:
+        return _NORM[impl]
+    except KeyError:
+        raise ValueError(f"unknown norm impl {impl!r}; have {sorted(_NORM)}")

@@ -97,6 +97,21 @@ def tile2d(m: int, n: int, itemsize: int = 4) -> tuple[int, int]:
     return bm, bn
 
 
+def norm_rows(n_rows: int, n_cols: int, n_streams: int = 4,
+              itemsize: int = 4) -> int:
+    """Rows per block for the fused norm-seam kernels (fused_norm.py).
+
+    Like :func:`row_block` these are whole-row kernels (the moments need
+    the full feature dim), but the residual-norm epilogue keeps FOUR
+    (bm, d) streams resident at once — x, the residual, and both outputs
+    — so the per-stream budget is halved to keep the double-buffered
+    resident set inside VMEM_CORE_BUDGET.
+    """
+    per_row = max(n_cols, 1) * itemsize * max(n_streams, 1)
+    rows = max(2 * VMEM_TILE_BUDGET // per_row, SUBLANE)
+    return fit_block(n_rows, SUBLANE, rows)
+
+
 def matmul_blocks(m: int, f: int, want_m: int = 128,
                   want_f: int = 512) -> tuple[int, int]:
     """(bm, bf) output-tile shape for matmul-epilogue kernels.

@@ -19,8 +19,8 @@ from repro.kernels import flash_attention_int as _pallas_int    # noqa: F401
 from repro.kernels import flash_decode as _pallas_decode        # noqa: F401
 from repro.kernels import ring_attention as _pallas_ring        # noqa: F401
 from . import flash as _flash                                   # noqa: F401
-from .layers import (Params, apply_rope, linear, linear_init, rmsnorm,
-                     rmsnorm_init)
+from .layers import (Params, apply_rope, layernorm, linear, linear_init,
+                     rmsnorm, rmsnorm_init)
 
 
 class AttnSpec(NamedTuple):
@@ -40,6 +40,9 @@ class AttnSpec(NamedTuple):
     # opts 'auto' into resolving flash_ring when the ambient mesh shards
     # the KV sequence dim over this axis
     ring_axis: str = ""
+    # eps for the qk-norm rmsnorms — MUST carry cfg.norm_eps (the spec
+    # builders thread it; norms themselves take eps with no default)
+    norm_eps: float = 1e-6
 
 
 class MLASpec(NamedTuple):
@@ -54,6 +57,8 @@ class MLASpec(NamedTuple):
     softmax_impl: str = "float"
     attn_impl: str = "auto"
     ring_axis: str = ""
+    # eps for the q/kv latent rmsnorms — carries cfg.norm_eps
+    norm_eps: float = 1e-6
 
 
 # ---------------- shared core ----------------
@@ -243,21 +248,47 @@ def gqa_cache_init(s: AttnSpec, batch: int, max_seq: int, dtype) -> Params:
 
 
 def gqa_apply(p: Params, s: AttnSpec, x, *, positions, cache=None, pos=0,
-              paged=None):
+              paged=None, prenorm=None):
     """x: (B,S,d).  If cache given: write new kv at `pos`, attend over cache.
     Returns (out, new_cache_or_None).
 
     ``paged`` (B, max_blocks) int32 block tables switches the cache from
     contiguous (B, Smax, K, h) rows to (N, bs, K, h) pools: writes
-    scatter through the table, attention runs :func:`_sdpa_paged`."""
+    scatter through the table, attention runs :func:`_sdpa_paged`.
+
+    ``prenorm=(norm_params, kind, eps, provider)`` hands this sublayer
+    its own input norm (the block's norm1): with a fused provider and
+    bias-free projections the norm->QKV seam runs as ONE Pallas kernel
+    over the concatenated [wq|wk|wv] panel (kernels/fused_norm
+    .norm_linear); otherwise the dense norm applies here and the three
+    projections proceed unchanged."""
     b, sl, _ = x.shape
     g = s.n_heads // s.n_kv_heads
-    q = linear(p["wq"], x).reshape(b, sl, s.n_heads, s.head_dim)
-    k = linear(p["wk"], x).reshape(b, sl, s.n_kv_heads, s.head_dim)
-    v = linear(p["wv"], x).reshape(b, sl, s.n_kv_heads, s.head_dim)
+    fused_qkv = None
+    if prenorm is not None:
+        np_, kind, eps, nprov = prenorm
+        if nprov is not None and not s.qkv_bias:
+            w_cat = jnp.concatenate(
+                [p["wq"]["w"], p["wk"]["w"], p["wv"]["w"]], axis=1)
+            fused_qkv = nprov["norm_linear"](x, np_["g"], np_.get("b"),
+                                             w_cat, kind=kind, eps=eps)
+        else:
+            x = (rmsnorm if kind == "rms" else layernorm)(np_, x, eps)
+    if fused_qkv is not None:
+        nq = s.n_heads * s.head_dim
+        nk = s.n_kv_heads * s.head_dim
+        q = fused_qkv[..., :nq].reshape(b, sl, s.n_heads, s.head_dim)
+        k = fused_qkv[..., nq:nq + nk].reshape(b, sl, s.n_kv_heads,
+                                               s.head_dim)
+        v = fused_qkv[..., nq + nk:].reshape(b, sl, s.n_kv_heads,
+                                             s.head_dim)
+    else:
+        q = linear(p["wq"], x).reshape(b, sl, s.n_heads, s.head_dim)
+        k = linear(p["wk"], x).reshape(b, sl, s.n_kv_heads, s.head_dim)
+        v = linear(p["wv"], x).reshape(b, sl, s.n_kv_heads, s.head_dim)
     if s.qk_norm:
-        q = rmsnorm(p["qn"], q)
-        k = rmsnorm(p["kn"], k)
+        q = rmsnorm(p["qn"], q, s.norm_eps)
+        k = rmsnorm(p["kn"], k, s.norm_eps)
     if s.use_rope:
         q = apply_rope(q, positions, s.rope_theta)
         k = apply_rope(k, positions, s.rope_theta)
@@ -319,7 +350,8 @@ def mla_apply(p: Params, s: MLASpec, x, *, positions, cache=None, pos=0,
     b, sl, _ = x.shape
     qk_head = s.nope_dim + s.rope_dim
     if s.q_lora_rank:
-        q = linear(p["wq_b"], rmsnorm(p["q_norm"], linear(p["wq_a"], x)))
+        q = linear(p["wq_b"],
+                   rmsnorm(p["q_norm"], linear(p["wq_a"], x), s.norm_eps))
     else:
         q = linear(p["wq"], x)
     q = q.reshape(b, sl, s.n_heads, qk_head)
@@ -327,7 +359,7 @@ def mla_apply(p: Params, s: MLASpec, x, *, positions, cache=None, pos=0,
     q_rope = apply_rope(q_rope, positions, s.rope_theta)
 
     kv_a = linear(p["wkv_a"], x)                       # (B,S,kv_lora+rope)
-    ckv = rmsnorm(p["kv_norm"], kv_a[..., : s.kv_lora_rank])
+    ckv = rmsnorm(p["kv_norm"], kv_a[..., : s.kv_lora_rank], s.norm_eps)
     k_rope_new = apply_rope(kv_a[..., s.kv_lora_rank:][:, :, None, :],
                             positions, s.rope_theta)[:, :, 0, :]
 

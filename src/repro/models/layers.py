@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.activations import get_activation
+from repro.kernels import datapath as dp
 from repro.kernels import dispatch
 from repro.kernels import fused_ffn as _fused_ffn  # noqa: F401  (registers)
 
@@ -49,27 +50,27 @@ def linear(p: Params, x):
 
 
 # ---------------- norms ----------------
+#
+# Thin wrappers over the datapath's single float definitions
+# (kernels/datapath.rmsnorm / .layernorm).  The numeric contract lives
+# there: moments AND gain/bias entirely in f32, ONE downcast on the
+# finished result (applied here).  ``eps`` is required — call sites must
+# thread cfg.norm_eps so nothing drifts from the config value.
 
 def rmsnorm_init(d: int, dtype) -> Params:
     return {"g": jnp.ones((d,), dtype)}
 
 
-def rmsnorm(p: Params, x, eps: float = 1e-6):
-    x32 = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
-    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+def rmsnorm(p: Params, x, eps: float):
+    return dp.rmsnorm(x, p["g"], eps).astype(x.dtype)
 
 
 def layernorm_init(d: int, dtype) -> Params:
     return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
 
 
-def layernorm(p: Params, x, eps: float = 1e-6):
-    x32 = x.astype(jnp.float32)
-    mu = jnp.mean(x32, axis=-1, keepdims=True)
-    var = jnp.var(x32, axis=-1, keepdims=True)
-    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
-    return y.astype(x.dtype) * p["g"] + p["b"]
+def layernorm(p: Params, x, eps: float):
+    return dp.layernorm(x, p["g"], p["b"], eps).astype(x.dtype)
 
 
 def make_norm(kind: str):
@@ -126,14 +127,18 @@ def mlp_init(key, d: int, d_ff: int, dtype, gated: bool = True,
 
 
 # activations the fused epilogue (datapath.pair_act, float log-domain
-# form) reproduces exactly; anything else — relu2, the bit-accurate
-# dualmode/igelu variants, erf-exact GELU — must stay on the dense path
-# rather than be silently approximated.
+# form) agrees with MATHEMATICALLY — gelu_tanh is the tanh-form identity
+# tanh(k) = 2*sigma(2k)-1 of the same curve, not the same instruction
+# sequence, so fused-vs-dense parity is a small-ULP tolerance, not
+# bitwise (pinned per entry in tests/test_fused_ffn.py).  Anything else —
+# relu2, the bit-accurate dualmode/igelu variants, erf-exact GELU — must
+# stay on the dense path rather than be silently approximated.
 _FUSABLE_ACT = {"gelu_tanh": "gelu", "gelu_via_softmax": "gelu",
                 "silu": "silu", "silu_via_softmax": "silu"}
 
 
-def mlp(p: Params, x, activation: str = "silu", impl: str = "dense"):
+def mlp(p: Params, x, activation: str = "silu", impl: str = "dense",
+        prenorm=None, norm_impl: str = "dense"):
     """(Gated) MLP.  For gated GLU the activation applies to the gate path —
     this is where the dual-mode unit's GELU/SiLU mode is used.
 
@@ -141,9 +146,25 @@ def mlp(p: Params, x, activation: str = "silu", impl: str = "dense"):
     XLA graph; 'fused_pallas' runs the bias-free gated pair through the
     fused matmul+epilogue kernel (kernels/fused_ffn.py) when the
     activation is one the fused epilogue computes exactly; 'auto' picks
-    'fused_pallas' on TPU and 'dense' elsewhere (dispatch.resolve_ffn)."""
+    'fused_pallas' on TPU and 'dense' elsewhere (dispatch.resolve_ffn).
+
+    ``prenorm=(norm_params, kind, eps)`` makes this sublayer own its norm
+    seam: with a fused norm provider (``norm_impl``, fusable activation,
+    bias-free gate/up) the norm->gate/up prologue runs as ONE Pallas
+    kernel (kernels/fused_norm.norm_glu); otherwise the dense norm is
+    applied here and the body proceeds unchanged."""
     fused = dispatch.get_ffn(dispatch.resolve_ffn(impl))
     mode = _FUSABLE_ACT.get(activation)
+    if prenorm is not None:
+        np_, kind, eps = prenorm
+        nprov = dispatch.get_norm(dispatch.resolve_norm(norm_impl))
+        if (nprov is not None and mode is not None and "gate" in p
+                and "b" not in p["gate"] and "b" not in p["up"]):
+            h = nprov["norm_glu"](x, np_["g"], np_.get("b"),
+                                  p["gate"]["w"], p["up"]["w"],
+                                  kind=kind, eps=eps, mode=mode)
+            return linear(p["down"], h)
+        x = (rmsnorm if kind == "rms" else layernorm)(np_, x, eps)
     if (fused is not None and mode is not None and "gate" in p
             and "b" not in p["gate"] and "b" not in p["up"]):
         x2 = x.reshape(-1, x.shape[-1])

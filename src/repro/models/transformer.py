@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import dispatch
 from .attention import (AttnSpec, MLASpec, cross_apply, cross_init, cross_kv,
                         gqa_apply, gqa_cache_init, gqa_init, mla_apply,
                         mla_cache_init, mla_init)
@@ -39,7 +40,7 @@ def attn_spec(cfg: ModelConfig, causal: bool | None = None) -> AttnSpec:
                     rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl,
                     causal=cfg.causal if causal is None else causal,
                     use_rope=cfg.use_rope, attn_impl=cfg.attn_impl,
-                    ring_axis=cfg.ring_axis)
+                    ring_axis=cfg.ring_axis, norm_eps=cfg.norm_eps)
 
 
 def mla_spec(cfg: ModelConfig) -> MLASpec:
@@ -47,7 +48,8 @@ def mla_spec(cfg: ModelConfig) -> MLASpec:
     return MLASpec(cfg.d_model, cfg.n_heads, m.q_lora_rank, m.kv_lora_rank,
                    m.nope_dim, m.rope_dim, m.v_dim,
                    rope_theta=cfg.rope_theta, softmax_impl=cfg.softmax_impl,
-                   attn_impl=cfg.attn_impl, ring_axis=cfg.ring_axis)
+                   attn_impl=cfg.attn_impl, ring_axis=cfg.ring_axis,
+                   norm_eps=cfg.norm_eps)
 
 
 def mamba_spec(cfg: ModelConfig) -> MambaSpec:
@@ -149,24 +151,43 @@ def block_apply(p: Params, cfg: ModelConfig, spec: LayerSpec, x, cache,
     aux = jnp.zeros((), jnp.float32)
     b = x.shape[0]
 
-    h = _pin(ctx, norm(p["norm1"], x, cfg.norm_eps), "full")
+    # Fused norm seams (cfg.norm_impl -> kernels/fused_norm.py): gated to
+    # pins-off — the Megatron inner pins must observe the residual stream
+    # and the normed stream as SEPARATE shardable values, which is exactly
+    # what fusing removes.  With a provider:
+    #   * mixer 'attn': norm1 fuses into the QKV projection (prologue),
+    #   * residual-add + norm2 fuse into one epilogue after the mixer
+    #     (covers mlp AND moe — the epilogue is activation-independent),
+    #   * a cross-less 'none'-mixer block fuses norm2 into the gate/up
+    #     prologue inside mlp() instead.
+    # The FFN-residual + NEXT block's norm1 seam is covered by that next
+    # block's prologue, so every seam is one HBM round-trip shorter.
+    nprov = dispatch.get_norm(dispatch.resolve_norm(cfg.norm_impl))
+    fuse = (nprov is not None and ctx.pin_full is None
+            and ctx.pin_sp is None)
+
+    o = None
     if spec.mixer == "attn":
+        if fuse:
+            h, pn = x, (p["norm1"], cfg.norm, cfg.norm_eps, nprov)
+        else:
+            h, pn = _pin(ctx, norm(p["norm1"], x, cfg.norm_eps), "full"), None
         o, kv = gqa_apply(p["mixer"], attn_spec(cfg), h,
                           positions=ctx.positions,
                           cache=cache.get("kv") if ctx.cached else None,
-                          pos=ctx.pos, paged=ctx.paged)
+                          pos=ctx.pos, paged=ctx.paged, prenorm=pn)
         if ctx.cached:
             new_cache["kv"] = kv
-        x = x + o
     elif spec.mixer == "mla":
+        h = _pin(ctx, norm(p["norm1"], x, cfg.norm_eps), "full")
         o, kv = mla_apply(p["mixer"], mla_spec(cfg), h,
                           positions=ctx.positions,
                           cache=cache.get("kv") if ctx.cached else None,
                           pos=ctx.pos, paged=ctx.paged)
         if ctx.cached:
             new_cache["kv"] = kv
-        x = x + o
     elif spec.mixer == "mamba":
+        h = _pin(ctx, norm(p["norm1"], x, cfg.norm_eps), "full")
         st = (cache["state"] if ctx.cached
               else mamba_state_init(mamba_spec(cfg), b, x.dtype))
         # NOTE: axes-pins measured NEUTRAL-to-negative here (EXPERIMENTS.md
@@ -174,15 +195,24 @@ def block_apply(p: Params, cfg: ModelConfig, spec: LayerSpec, x, cache,
         o, st = mamba_apply(p["mixer"], mamba_spec(cfg), h, state=st)
         if ctx.cached:
             new_cache["state"] = st
-        x = x + o
     elif spec.mixer == "rwkv":
+        h = _pin(ctx, norm(p["norm1"], x, cfg.norm_eps), "full")
         st = (cache["state"] if ctx.cached
               else rwkv_state_init(rwkv_spec(cfg), b, x.dtype))
         o, tm_st = rwkv_time_mix(p["mixer"], rwkv_spec(cfg), h, state=st)
         if ctx.cached:
             new_cache["state"] = {**st, **tm_st}
-        x = x + o
-    if spec.mixer != "none":
+
+    # mixer residual add — fused with norm2 when the next consumer is the
+    # FFN norm (no cross sublayer in between)
+    h_ffn = None
+    if o is not None:
+        if fuse and spec.ffn != "none" and not spec.cross:
+            x, h_ffn = nprov["residual_norm"](
+                x, o, p["norm2"]["g"], p["norm2"].get("b"),
+                kind=cfg.norm, eps=cfg.norm_eps)
+        else:
+            x = x + o
         x = _pin(ctx, x, "sp")
 
     if spec.cross:
@@ -199,20 +229,30 @@ def block_apply(p: Params, cfg: ModelConfig, spec: LayerSpec, x, cache,
         x = _pin(ctx, x + jnp.tanh(p["cross_gate"]) * o, "sp")
 
     if spec.ffn != "none":
-        h = _pin(ctx, norm(p["norm2"], x, cfg.norm_eps), "full")
-        if spec.ffn == "mlp":
-            x = x + mlp(p["ffn"], h, cfg.activation, impl=cfg.ffn_impl)
-        elif spec.ffn == "moe":
-            o, aux = moe_apply(p["ffn"], moe_spec(cfg), h,
-                               dropless=ctx.cached, axes=ctx.moe_axes)
-            x = x + o
-        elif spec.ffn == "rwkv_cm":
-            st = (cache["state"] if ctx.cached
-                  else rwkv_state_init(rwkv_spec(cfg), b, x.dtype))
-            o, cm_st = rwkv_channel_mix(p["ffn"], rwkv_spec(cfg), h, state=st)
-            if ctx.cached:
-                new_cache["state"] = {**new_cache.get("state", st), **cm_st}
-            x = x + o
+        if h_ffn is None and spec.ffn == "mlp" and fuse:
+            # no epilogue produced h (mixer 'none' or a cross sublayer
+            # re-touched x): fuse norm2 into the gate/up prologue instead
+            x = x + mlp(p["ffn"], x, cfg.activation, impl=cfg.ffn_impl,
+                        prenorm=(p["norm2"], cfg.norm, cfg.norm_eps),
+                        norm_impl=cfg.norm_impl)
+        else:
+            h = (h_ffn if h_ffn is not None
+                 else _pin(ctx, norm(p["norm2"], x, cfg.norm_eps), "full"))
+            if spec.ffn == "mlp":
+                x = x + mlp(p["ffn"], h, cfg.activation, impl=cfg.ffn_impl)
+            elif spec.ffn == "moe":
+                o, aux = moe_apply(p["ffn"], moe_spec(cfg), h,
+                                   dropless=ctx.cached, axes=ctx.moe_axes)
+                x = x + o
+            elif spec.ffn == "rwkv_cm":
+                st = (cache["state"] if ctx.cached
+                      else rwkv_state_init(rwkv_spec(cfg), b, x.dtype))
+                o, cm_st = rwkv_channel_mix(p["ffn"], rwkv_spec(cfg), h,
+                                            state=st)
+                if ctx.cached:
+                    new_cache["state"] = {**new_cache.get("state", st),
+                                          **cm_st}
+                x = x + o
         x = _pin(ctx, x, "sp")
     return x, new_cache, aux
 

@@ -1,10 +1,12 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
 real single CPU device; multi-device tests spawn subprocesses that set
 --xla_force_host_platform_device_count themselves."""
+import gc
 import os
 import subprocess
 import sys
 
+import jax
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -24,3 +26,15 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560):
 @pytest.fixture(scope="session")
 def subproc():
     return run_with_devices
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_xla_state():
+    """A full single-process run accumulates hundreds of live XLA
+    executables; past ~550 tests the CPU compiler segfaults on the next
+    large compile. Dropping JAX caches at module boundaries keeps the
+    process well under that tipping point (modules rarely share shapes,
+    so cross-module cache hits were negligible anyway)."""
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -56,11 +56,25 @@ def test_bench_schemas_accept_committed_artifacts():
             ("BENCH_flash_int.json", schema.FLASH_INT_SPEC,
              schema.FLASH_INT_RULES),
             ("BENCH_decode.json", schema.DECODE_SPEC, schema.DECODE_RULES),
-            ("BENCH_serve.json", schema.SERVE_SPEC, schema.SERVE_RULES)]:
+            ("BENCH_serve.json", schema.SERVE_SPEC, schema.SERVE_RULES),
+            ("BENCH_block.json", schema.BLOCK_SPEC, schema.BLOCK_RULES)]:
         path = os.path.join(REPO, fname)
         if not os.path.exists(path):
             pytest.skip(f"{fname} not committed")
         schema.validate_file(path, spec, rules, fname)
+
+
+def test_block_rules_catch_a_zero_saving():
+    path = os.path.join(REPO, "BENCH_block.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_block.json not committed")
+    with open(path) as fh:
+        d = json.load(fh)
+    seam = d["seams"]["attn_qkv_prologue"]
+    seam["saved_bytes"] = 0
+    seam["fused_hbm_bytes"] = seam["dense_hbm_bytes"]
+    with pytest.raises(AssertionError, match="saves HBM traffic"):
+        schema.validate(d, schema.BLOCK_SPEC, schema.BLOCK_RULES)
 
 
 def test_serve_rules_catch_a_cache_copy():
@@ -88,7 +102,8 @@ def test_int_purity_real_paths_clean():
     # passing would mean the pass silently audits nothing
     checked = set(out["checked"])
     assert {"softmax:dualmode", "softmax:dualmode_snap", "gelu:dualmode",
-            "softmax_pallas:int"} <= checked
+            "softmax_pallas:int", "rmsnorm:dualmode",
+            "layernorm:dualmode"} <= checked
     assert any(c.startswith("attn:flash_pallas_int:") for c in checked)
     assert any(c.startswith("attn:flash_decode:") for c in checked)
 
@@ -129,7 +144,11 @@ def test_vmem_grid_within_budget():
     assert len(out["cells"]) >= 10          # the whole grid, not a sample
     kernels = {c["kernel"] for c in out["cells"]}
     assert {"flash_attention", "flash_attention_int", "flash_decode",
-            "fused_ffn"} <= kernels
+            "fused_ffn", "fused_norm"} <= kernels
+    # all three norm seams priced, not just one
+    norm_calls = {c["call"] for c in out["cells"]
+                  if c["kernel"] == "fused_norm"}
+    assert {"resnorm_fwd", "norm_linear_fwd", "norm_glu_fwd"} <= norm_calls
 
 
 def test_vmem_catches_oversubscribed_plan():
@@ -192,6 +211,20 @@ def test_dispatch_catches_rogue_registry_entry():
                for p in m["problems"])
 
 
+def test_dispatch_catches_half_fused_norm_provider():
+    """A norm provider missing a NORM_SEAMS callable is exactly the
+    half-fused block the provider contract refuses."""
+    dispatch.get_norm("fused_pallas")
+    dispatch._NORM["rogue"] = {"residual_norm": lambda *a, **k: None}
+    try:
+        m = dispatch_table.enumerate_matrix()
+    finally:
+        dispatch._NORM.pop("rogue", None)
+    missing = [p for p in m["problems"]
+               if "rogue" in p and "missing seam" in p]
+    assert len(missing) == 2, m["problems"]       # norm_linear + norm_glu
+
+
 # ---------------------------------------------------------------------------
 # the CLI end to end (subprocess: the mesh pass needs XLA_FLAGS set
 # before jax import, which an in-process test can't do)
@@ -235,7 +268,7 @@ def test_audit_cli_mesh_fixture_detected(tmp_path):
 
 
 def test_audit_cli_purity_and_dispatch_fixtures_detected(tmp_path):
-    for fixture in ("int_purity", "dispatch", "vmem"):
+    for fixture in ("int_purity", "dispatch", "vmem", "norm"):
         r, _ = _run_audit(tmp_path, "--fixture", fixture, "--passes", "")
         assert r.returncode != 0, f"fixture {fixture} went undetected"
         assert "detected as intended" in r.stdout

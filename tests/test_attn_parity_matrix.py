@@ -315,3 +315,99 @@ def test_flash_decode_paged_matches_fold_oracle(case):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(ref, np.float32),
                                atol=ATOL[dtype])
+
+
+# ---------------- norm seams: the normalization resident's rows --------
+# PR 9 makes RMSNorm/LayerNorm the third resident of the exp/log unit
+# and fuses the block's norm seams (kernels/fused_norm.py).  The same
+# matrix cases, re-read as token streams (m = b*s tokens of width
+# d = k*g*h), pin the fused residual-add+norm epilogue against the dense
+# pinned contract — outputs AND every gradient leg (dx, dr, dg, db) —
+# including ragged (whole zero rows: the eps guard carries them) and
+# non-divisible row counts vs the kernel's bm grid.
+
+NORM_EPS = 1e-6
+NORM_KINDS = ("rms", "layer")
+NORM_CASES = ("gqa", "ragged", "bf16", "non_divisible")
+# dead ragged rows ride the eps guard: dx there is O(1/sqrt(eps)), so
+# the f32 leg needs a (tiny) rtol; bf16 weight-grads accumulate input
+# rounding over the m rows, hence the wider atol
+NORM_RTOL = {"float32": 1e-5, "bfloat16": 2e-2}
+NORM_GRAD_ATOL = {"float32": 2e-5, "bfloat16": 1e-1}
+
+
+def _norm_case(name, kind):
+    c = CASES[name]
+    m, d = c["b"] * c["s"], c["k"] * c["g"] * c["h"]
+    dtype = jnp.dtype(c.get("dtype", "float32"))
+    rng = np.random.default_rng(RNG_SEED)
+    x = rng.normal(size=(m, d))
+    r = rng.normal(size=(m, d))
+    if c.get("ragged"):
+        dead = rng.random(m) > 0.7      # padded token rows, x + r == 0
+        x[dead] = 0.0
+        r[dead] = 0.0
+    x, r = jnp.asarray(x, dtype), jnp.asarray(r, dtype)
+    g = jnp.asarray(1.0 + 0.1 * rng.normal(size=(d,)), dtype)
+    b = (jnp.asarray(0.1 * rng.normal(size=(d,)), dtype)
+         if kind == "layer" else None)
+    co = jnp.asarray(rng.normal(size=(2, m, d)), jnp.float32)
+    return x, r, g, b, co, str(dtype)
+
+
+def _norm_pair(kind):
+    from repro.kernels import datapath as dp
+    from repro.kernels.fused_norm import fused_residual_norm
+
+    def dense(x, r, g, b):
+        s = x + r
+        y = (dp.rmsnorm(s, g, NORM_EPS) if kind == "rms"
+             else dp.layernorm(s, g, b, NORM_EPS))
+        return s, y.astype(x.dtype)
+
+    def fused(x, r, g, b):
+        return fused_residual_norm(x, r, g, b, kind=kind, eps=NORM_EPS,
+                                   interpret=True, bm=8)
+
+    return dense, fused
+
+
+@pytest.mark.parametrize("kind", NORM_KINDS)
+@pytest.mark.parametrize("case", NORM_CASES)
+def test_norm_epilogue_outputs_match_dense(case, kind):
+    x, r, g, b, _, dtype = _norm_case(case, kind)
+    dense, fused = _norm_pair(kind)
+    want, got = dense(x, r, g, b), fused(x, r, g, b)
+    for i in range(2):
+        assert got[i].shape == want[i].shape
+        assert got[i].dtype == want[i].dtype
+        np.testing.assert_allclose(np.asarray(got[i], np.float32),
+                                   np.asarray(want[i], np.float32),
+                                   atol=ATOL[dtype], rtol=NORM_RTOL[dtype],
+                                   err_msg=f"{case}/{kind}[{i}]")
+
+
+@pytest.mark.parametrize("kind", NORM_KINDS)
+@pytest.mark.parametrize("case", NORM_CASES)
+def test_norm_epilogue_grads_match_dense(case, kind):
+    x, r, g, b, co, dtype = _norm_case(case, kind)
+    dense, fused = _norm_pair(kind)
+    args = (x, r, g) + ((b,) if kind == "layer" else ())
+    names = ("dx", "dr", "dg") + (("db",) if kind == "layer" else ())
+
+    def g_of(f):
+        def loss(*a):
+            xb = a + (None,) if kind == "rms" else a
+            s, y = f(*xb)
+            return (jnp.vdot(s.astype(jnp.float32), co[0])
+                    + jnp.vdot(y.astype(jnp.float32), co[1]))
+        return jax.grad(loss, argnums=tuple(range(len(args))))(*args)
+
+    got, want = g_of(fused), g_of(dense)
+    for name, a_, b_ in zip(names, got, want):
+        assert bool(jnp.all(jnp.isfinite(a_.astype(jnp.float32)))), name
+        np.testing.assert_allclose(np.asarray(a_, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   atol=NORM_GRAD_ATOL[dtype],
+                                   rtol=NORM_RTOL[dtype],
+                                   err_msg=f"{case}/{kind}/{name}")

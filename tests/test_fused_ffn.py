@@ -135,3 +135,25 @@ def test_fused_glu_odd_tiles():
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(fused_glu_ref(x, wg, wu)),
                                atol=2e-5, rtol=2e-5)
+
+
+def test_fusable_act_table_parity_pinned_per_entry():
+    """The _FUSABLE_ACT table claims each entry agrees MATHEMATICALLY
+    with the fused epilogue (datapath.pair_act) — identity-level, not
+    bitwise (gelu_tanh routes through tanh(k) = 2*sigma(2k)-1, the
+    *_via_softmax forms through the two-element pair softmax).  Pin the
+    fused-vs-dense residual per entry: a few ULPs of reassociation, far
+    below any approximation error — if an entry ever drifts past this,
+    it no longer belongs in the table."""
+    from repro.models.layers import _FUSABLE_ACT, mlp, mlp_init
+    tol = {"gelu_tanh": 2e-6, "gelu_via_softmax": 1e-6,
+           "silu": 1e-6, "silu_via_softmax": 1e-6}
+    assert set(tol) == set(_FUSABLE_ACT)       # table and pins in lockstep
+    x = jnp.asarray(RNG.normal(size=(2, 6, 64)), jnp.float32)
+    p = mlp_init(jax.random.PRNGKey(2), 64, 128, jnp.float32, gated=True)
+    for act, mode in _FUSABLE_ACT.items():
+        assert mode in ("gelu", "silu")
+        fused = mlp(p, x, act, impl="fused_pallas")
+        dense = mlp(p, x, act, impl="dense")
+        err = float(jnp.abs(fused - dense).max())
+        assert err <= tol[act], (act, err)
