@@ -570,6 +570,50 @@ def main_serve(json_path: str | None = None, *, n_requests: int = 12,
          run["wall_s"] / max(run["tokens"], 1) * 1e6,
          f"{run['tokens']} tokens, decode={eng.decode_attn_impl}"
          f"/{eng.decode_softmax_impl}")
+
+    # pressure rows (ISSUE 10): a decode-heavy workload on a pool sized
+    # at 0.5x the worst-case block demand of a full slot complement,
+    # worst-case reservation vs reactive allocation + preemption.
+    # Reserving only prompt reach must buy strictly more concurrency at
+    # equal memory, and preemption/recompute must be invisible in the
+    # token counts — every request terminates, nothing leaks.  The
+    # requests are deterministic and UNIFORM (2-block prompts, 6-block
+    # worst-case reach, no shared prefixes): mixed sizes would let
+    # worst-case reservation sneak small requests into the pool and tie
+    # the concurrency high-water it is supposed to lose.
+    from repro.kernels import tiling
+    bs = tiling.paged_block_size(max_seq)
+    press_slots = n_slots
+    press_reqs = [Request(rid=i, prompt=[1000 * i + j + 1
+                                         for j in range(2 * bs)],
+                          max_new=4 * bs)
+                  for i in range(2 * press_slots)]
+    worst = tiling.cdiv(6 * bs, bs)                   # 6 blocks apiece
+    press_blocks = (press_slots * worst) // 2 + 1
+    results["pressure"] = {"num_blocks": press_blocks - 1,
+                           "worst_case_demand": press_slots * worst,
+                           "modes": {}}
+    for adm in ("worst_case", "reactive"):
+        eng = ServeEngine(cfg, params, cache_mode="paged", seed=0,
+                          n_slots=press_slots, max_seq=max_seq,
+                          prefill_chunk=prefill_chunk,
+                          num_blocks=press_blocks, admission=adm)
+        run = _run_engine_traced(eng, [Request(**vars(r))
+                                       for r in press_reqs])
+        st = eng.stats
+        run.update({"preemptions": st["preemptions"],
+                    "resumes": st["resumes"],
+                    "admit_blocked": st["admit_blocked"],
+                    "hol_skips": st["hol_skips"],
+                    "unterminated": sum(1 for r in press_reqs
+                                        if r.rid not in eng.finished),
+                    "leaked_blocks": eng.pool.in_use()})
+        results["pressure"]["modes"][adm] = run
+        emit(f"serve/pressure_{adm}_tok_s",
+             run["wall_s"] / max(run["tokens"], 1) * 1e6,
+             f"{run['tokens']} tokens, conc_hwm={run['concurrent_hwm']}, "
+             f"preempts={run['preemptions']}, "
+             f"blocked={run['admit_blocked']}")
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(results, fh, indent=2)

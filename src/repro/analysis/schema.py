@@ -157,6 +157,9 @@ DECODE_RULES = [
 
 _MODE_SPEC = {"tokens": int, "tokens_per_s": NUM, "cache_copies": int,
               "concurrent_hwm": int}
+_PRESSURE_MODE_SPEC = {"tokens": int, "tokens_per_s": NUM,
+                       "concurrent_hwm": int, "preemptions": int,
+                       "unterminated": int, "leaked_blocks": int}
 SERVE_SPEC = {
     "backend": str,
     "interpret": bool,
@@ -166,6 +169,9 @@ SERVE_SPEC = {
                     "decode_attn_impl": ("eq", "flash_decode"),
                     "decode_softmax_impl": ("eq", "dualmode"),
                     "prefill_softmax_impl": ("eq", "float")},
+    "pressure": {"num_blocks": int, "worst_case_demand": int,
+                 "modes": {"worst_case": _PRESSURE_MODE_SPEC,
+                           "reactive": _PRESSURE_MODE_SPEC}},
 }
 SERVE_RULES = [
     ("both modes produced tokens at positive throughput",
@@ -191,6 +197,23 @@ SERVE_RULES = [
     ("mixed-phase engine produced tokens",
      lambda d: d["mixed_phase"]["tokens"] > 0
      and d["mixed_phase"]["tokens_per_s"] > 0),
+    ("pressure pool really was under worst-case demand",
+     lambda d: d["pressure"]["num_blocks"]
+     < d["pressure"]["worst_case_demand"]),
+    ("reactive+preempt reaches strictly higher concurrency than "
+     "worst-case reservation at the same pool",
+     lambda d: d["pressure"]["modes"]["reactive"]["concurrent_hwm"]
+     > d["pressure"]["modes"]["worst_case"]["concurrent_hwm"]),
+    ("preemption invisible in output: equal tokens under pressure",
+     lambda d: d["pressure"]["modes"]["reactive"]["tokens"]
+     == d["pressure"]["modes"]["worst_case"]["tokens"]),
+    ("every request terminated under pressure, zero blocks leaked",
+     lambda d: all(m["unterminated"] == 0 and m["leaked_blocks"] == 0
+                   for m in d["pressure"]["modes"].values())),
+    ("pressure actually bit: reactive preempted or blocked admission",
+     lambda d: (d["pressure"]["modes"]["reactive"]["preemptions"]
+                + d["pressure"]["modes"]["reactive"].get("admit_blocked",
+                                                         0)) > 0),
 ]
 
 _SEAM_SPEC = {"dense_hbm_bytes": int, "fused_hbm_bytes": int,

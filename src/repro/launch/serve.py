@@ -55,6 +55,28 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="paged prefill chunk length in tokens "
                          "(0 = default 64)")
+    ap.add_argument("--admission", default="reactive",
+                    choices=("reactive", "worst_case"),
+                    help="paged admission: 'reactive' reserves only the "
+                         "prompt's block reach and grows per decode tick "
+                         "(preempting under pool pressure), 'worst_case' "
+                         "reserves prompt+max_new up front so admitted "
+                         "requests never preempt")
+    ap.add_argument("--preempt-policy", default="youngest",
+                    choices=("youngest", "oldest"),
+                    help="victim choice under pool pressure (always "
+                         "lowest-priority first; this orders ties)")
+    ap.add_argument("--preempt-mode", default="recompute",
+                    choices=("recompute", "swap"),
+                    help="'recompute' drops a victim's blocks and "
+                         "re-prefills on resume; 'swap' copies them to "
+                         "host memory and restores the exact bytes")
+    ap.add_argument("--hol-window", type=int, default=4,
+                    help="queue entries a pool-blocked head request can "
+                         "be skipped past at admission (1 = strict FCFS)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none); "
+                         "expired requests retire with reason 'deadline'")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -73,7 +95,11 @@ def main() -> None:
                       cache_mode=args.cache_mode,
                       block_size=args.block_size or None,
                       num_blocks=args.num_blocks or None,
-                      prefill_chunk=args.prefill_chunk or None)
+                      prefill_chunk=args.prefill_chunk or None,
+                      admission=args.admission,
+                      preempt_policy=args.preempt_policy,
+                      preempt_mode=args.preempt_mode,
+                      hol_window=args.hol_window)
     mode = eng.cache_mode
     if mode == "paged":
         mode += (f" (block={eng.block_size} pool={eng.num_blocks} "
@@ -88,7 +114,8 @@ def main() -> None:
         prompt = [int(t) for t in
                   jax.random.randint(k, (plen,), 0, cfg.vocab - 1)]
         reqs.append(Request(rid=i, prompt=prompt, max_new=args.max_new,
-                            temperature=args.temperature))
+                            temperature=args.temperature,
+                            deadline_s=args.deadline_s or None))
     t0 = time.perf_counter()
     outs = eng.run(reqs)
     dt = time.perf_counter() - t0

@@ -2,3 +2,8 @@ from .engine import (Request, ServeEngine, make_chunk_prefill_step,
                      make_decode_step, make_paged_decode_step,
                      make_prefill_step)
 from .paged_cache import BlockPool, chain_hashes
+
+# NOTE: the fault-injection harness lives in `repro.serve.faults`
+# (FaultInjector, chaos_soak) and is imported explicitly — keeping it
+# out of the package namespace lets `python -m repro.serve.faults` run
+# without the runpy double-import warning.

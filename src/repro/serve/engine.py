@@ -28,6 +28,23 @@ State-carrying mixers (mamba/rwkv), cross-attention caches and encoders
 have nothing to page and stay here; ``cache_mode='auto'`` picks per
 architecture.
 
+Serving under pressure (paged mode): ``admission='reactive'`` (the
+default) reserves only a request's PROMPT reach at admission and grows
+its block table one block at a time from inside the decode loop
+(``BlockPool.ensure_reach``) — the table must always cover the next
+write position, because out-of-table scatters clamp to the sentinel
+block and silently lose data.  On growth shortfall the engine preempts
+a victim (``preempt_policy``: lowest priority first, youngest admission
+by default) by either dropping its blocks for recompute-on-resume (the
+prompt + generated prefix re-enters the queue HEAD as one prefill) or
+swapping the block contents to a host-side store (``preempt_mode``).
+Backpressure is bounded by ``hol_window`` skip-ahead admission, wall
+clocks by per-request ``deadline_s``, and a per-step isfinite sentry
+quarantines a slot whose logits go non-finite without touching its
+neighbours.  Every request leaves the engine with a reason code in
+``engine.reasons``.  All of it is fault-injectable — see
+``repro.serve.faults``.
+
 Attention impls are selected PER PHASE through the kernel dispatch
 registry exactly as before; on the paged path the resolved decode impl
 additionally picks up its block-table native variant from
@@ -154,6 +171,28 @@ class Request:
     max_new: int = 32
     temperature: float = 0.0
     cross_src: Any = None            # stub frontend embeddings (VLM/encdec)
+    deadline_s: float | None = None  # wall-clock budget from submission
+    priority: int = 0                # higher = preempted later
+
+
+@dataclasses.dataclass
+class _QEntry:
+    """Internal queue record: a fresh submission or a preempted request
+    waiting to resume.  Recompute resumes carry ``resume_prompt`` (the
+    original prompt + every token generated so far — one prefill redoes
+    the dropped KV); swap resumes carry the saved block contents and
+    re-enter decode directly at ``pos``."""
+    req: Request
+    deadline_at: float | None = None
+    prior_out: list = dataclasses.field(default_factory=list)
+    resume_prompt: list | None = None
+    swap: Any = None                 # {'saved': host tree, 'n': #blocks}
+    pos: int = 0                     # swap resume: decode depth
+    out: list = dataclasses.field(default_factory=list)  # swap resume
+
+    @property
+    def is_resume(self) -> bool:
+        return self.resume_prompt is not None or self.swap is not None
 
 
 @dataclasses.dataclass
@@ -170,6 +209,13 @@ class _Slot:
     filled: int = 0
     blocks: list = dataclasses.field(default_factory=list)
     seq: int = 0                     # admission order (FCFS prefill)
+    # pressure fields: the ORIGINAL prompt and the tokens generated in
+    # earlier incarnations (before a preemption) — `finished[rid]` is
+    # always prior_out + out, so resumes are invisible to the caller
+    full_prompt: list = dataclasses.field(default_factory=list)
+    prior_out: list = dataclasses.field(default_factory=list)
+    priority: int = 0
+    deadline_at: float | None = None
 
     @property
     def free(self) -> bool:
@@ -193,7 +239,12 @@ class ServeEngine:
                  cache_mode: str = "auto",
                  block_size: int | None = None,
                  num_blocks: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 admission: str = "reactive",
+                 preempt_policy: str = "youngest",
+                 preempt_mode: str = "recompute",
+                 hol_window: int = 4,
+                 faults=None, clock=None):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.eos_id = eos_id
@@ -206,6 +257,12 @@ class ServeEngine:
         self.mesh = mesh
         if cache_mode not in ("auto", "paged", "contiguous"):
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        if admission not in ("reactive", "worst_case"):
+            raise ValueError(f"unknown admission {admission!r}")
+        if preempt_policy not in ("youngest", "oldest"):
+            raise ValueError(f"unknown preempt_policy {preempt_policy!r}")
+        if preempt_mode not in ("recompute", "swap"):
+            raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
         if cache_mode == "paged":
             if not paged_supported(cfg):
                 raise ValueError(
@@ -220,6 +277,12 @@ class ServeEngine:
                            (cache_mode == "auto" and paged_supported(cfg)
                             and mesh is None)
                            else "contiguous")
+        self.admission = admission
+        self.preempt_policy = preempt_policy
+        self.preempt_mode = preempt_mode
+        self.hol_window = max(1, hol_window)
+        self.faults = faults
+        self._now = clock or time.monotonic
         self.buckets = tuple(b for b in sorted(prefill_buckets)
                              if b <= max_seq) or (max_seq,)
         # state-carrying mixers (mamba/rwkv) integrate every input token —
@@ -301,14 +364,19 @@ class ServeEngine:
             self._decode = jax.jit(make_decode_step(decode_cfg))
         self._slots = [_Slot() for _ in range(n_slots)]
         self._admit_seq = 0
-        self._queue: list[Request] = []
+        self._queue: list[_QEntry] = []
         self._key = jax.random.PRNGKey(seed)
         self.finished: dict[int, list[int]] = {}
+        self.reasons: dict[int, str] = {}
         self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self.stats = {"prefills": 0, "decode_steps": 0, "admitted": 0,
                       "prefill_chunks": 0, "cache_copies": 0,
                       "shared_blocks": 0, "blocks_hwm": 0,
-                      "admit_time_s": 0.0}
+                      "admit_time_s": 0.0, "engine_steps": 0,
+                      "preemptions": 0, "swap_outs": 0, "swap_ins": 0,
+                      "resumes": 0, "hol_skips": 0, "admit_blocked": 0,
+                      "numeric": 0, "corrupt": 0, "deadlines": 0,
+                      "starved": []}
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else (
@@ -332,7 +400,9 @@ class ServeEngine:
                     f"exceeds pool of {self.num_blocks - 1}")
         else:
             self._bucket(len(req.prompt))
-        self._queue.append(req)
+        ddl = (None if req.deadline_s is None
+               else self._now() + req.deadline_s)
+        self._queue.append(_QEntry(req=req, deadline_at=ddl))
 
     def _bucket(self, n: int) -> int:
         if n > self.max_seq:
@@ -352,20 +422,54 @@ class ServeEngine:
         cap = min(len(req.prompt) + max(req.max_new, 0), self.max_seq)
         return tiling.cdiv(max(cap, 1), self.block_size)
 
+    def _finish_queued(self, e: _QEntry, reason: str) -> None:
+        self.finished[e.req.rid] = e.prior_out + e.out
+        self.reasons[e.req.rid] = reason
+
     def _drain_zero_tokens(self) -> None:
         """Finish queued max_new<=0 requests with EMPTY completions —
         they never consume a slot, a prefill, or emit the prefill-sampled
         token.  ONE pass at the queue head, hoisted out of the per-slot
         admission loop (the drain used to re-run — and re-read the queue
         head — once per slot, a burst of zero-token requests cost
-        O(queue·slots) head scans instead of O(queue))."""
-        while self._queue and self._queue[0].max_new <= 0:
+        O(queue·slots) head scans instead of O(queue)).  Resume entries
+        always have tokens left (a done slot retires instead of
+        preempting) and are never drained."""
+        while (self._queue and not self._queue[0].is_resume
+               and self._queue[0].req.max_new <= 0):
             done = self._queue.pop(0)
-            self.finished[done.rid] = []
+            self._finish_queued(done, "max_new")
             self.stats["admitted"] += 1
+
+    def _expire_queue_deadlines(self) -> None:
+        """Retire queued entries whose wall-clock budget ran out before
+        they reached a slot — reason 'deadline', partial output for
+        preempted resumes (the tokens they DID produce are not lost)."""
+        if not any(e.deadline_at is not None for e in self._queue):
+            return
+        now = self._now()
+        kept = []
+        for e in self._queue:
+            if e.deadline_at is not None and now >= e.deadline_at:
+                self._finish_queued(e, "deadline")
+                self.stats["deadlines"] += 1
+            else:
+                kept.append(e)
+        self._queue = kept
+
+    def _expire_running_deadlines(self) -> None:
+        now = None
+        for i, s in enumerate(self._slots):
+            if s.free or s.deadline_at is None:
+                continue
+            now = self._now() if now is None else now
+            if now >= s.deadline_at:
+                self.stats["deadlines"] += 1
+                self._finish_slot(i, "deadline")
 
     def _admit(self) -> None:
         t0 = time.perf_counter()
+        self._expire_queue_deadlines()
         self._drain_zero_tokens()
         for i, slot in enumerate(self._slots):
             if not self._queue:
@@ -373,15 +477,42 @@ class ServeEngine:
             if not slot.free:
                 continue
             if self.cache_mode == "paged":
-                if not self._admit_paged(i):
-                    break                   # pool full: head-of-line waits
+                if not self._admit_paged_window(i):
+                    # nothing in the skip-ahead window fits the pool
+                    self.stats["admit_blocked"] += 1
+                    break
             else:
                 self._admit_contiguous(i)
             self._drain_zero_tokens()
         self.stats["admit_time_s"] += time.perf_counter() - t0
 
+    def _admit_paged_window(self, i: int) -> bool:
+        """Admit the first queue entry within ``hol_window`` that the
+        pool can satisfy — a small request may skip past a blocked giant
+        (stats['hol_skips']).  FCFS prefix registration is preserved:
+        admission seq is assigned at admission and the prefill tick is
+        seq-ordered, so whoever admits first registers first."""
+        window = min(len(self._queue), self.hol_window)
+        for j in range(window):
+            entry = self._queue[j]
+            if (j > 0 and not entry.is_resume
+                    and entry.req.max_new <= 0):
+                continue            # drains at the head, never via a slot
+            if self._admit_entry(i, entry):
+                self._queue.pop(j)
+                if j > 0:
+                    self.stats["hol_skips"] += 1
+                return True
+        return False
+
+    def _admit_entry(self, i: int, entry: _QEntry) -> bool:
+        if entry.swap is not None:
+            return self._admit_swapped(i, entry)
+        return self._admit_paged(i, entry)
+
     def _admit_contiguous(self, i: int) -> None:
-        req = self._queue.pop(0)
+        entry = self._queue.pop(0)
+        req = entry.req
         L = self._bucket(len(req.prompt))
         toks = jnp.asarray(req.prompt + [0] * (L - len(req.prompt)),
                            jnp.int32)[None, :]
@@ -400,7 +531,10 @@ class ServeEngine:
         self.stats["cache_copies"] += 1
         self._slots[i] = _Slot(rid=req.rid, pos=len(req.prompt),
                                remaining=req.max_new, out=[],
-                               temperature=req.temperature)
+                               temperature=req.temperature,
+                               full_prompt=list(req.prompt),
+                               priority=req.priority,
+                               deadline_at=entry.deadline_at)
         self._key, k = jax.random.split(self._key)
         first = sample_token(k, logits[0], req.temperature)
         self._slots[i].out.append(int(first))
@@ -410,43 +544,217 @@ class ServeEngine:
         self.stats["admitted"] += 1
         self._retire(i)
 
-    def _admit_paged(self, i: int) -> bool:
-        """Zero-copy admission: reserve this request's worst-case blocks
+    def _admit_paged(self, i: int, entry: _QEntry) -> bool:
+        """Zero-copy admission: reserve this request's block reach
         (shared prefix by reference, the rest from the pool) and write
         its table row.  NO model compute, NO cache copies — prefill
-        happens chunk-at-a-time in subsequent engine steps.  Returns
+        happens chunk-at-a-time in subsequent engine steps.  Reactive
+        admission (default) reserves only the PROMPT reach and lets the
+        decode loop grow the table; 'worst_case' reserves
+        prompt+max_new up front so nothing ever preempts.  Returns
         False (leaving the request queued) when the pool is short."""
-        req = self._queue[0]
-        plen = len(req.prompt)
-        total = self._blocks_needed(req)
+        req = entry.req
+        prompt = (entry.resume_prompt if entry.resume_prompt is not None
+                  else req.prompt)
+        plen = len(prompt)
+        budget = max(req.max_new, 0) - len(entry.prior_out)
+        if self.admission == "worst_case":
+            cap = min(plen + max(budget, 0), self.max_seq)
+            total = tiling.cdiv(max(cap, 1), self.block_size)
+        else:
+            total = tiling.cdiv(max(plen, 1), self.block_size)
         # shareable prefix: FULL prompt blocks only, and never the block
         # holding the last prompt token — at least one token must run
         # through prefill to produce the first-sample logits (this also
         # guarantees writes never target a shared block)
-        hashes = chain_hashes(req.prompt, self.block_size)
-        shared = self.pool.match_prefix(hashes[:(plen - 1)
-                                               // self.block_size])
-        fresh = self.pool.alloc(total - len(shared))
-        if fresh is None:
-            for b in shared:                # roll back the prefix refs
-                self.pool.decref(b)
+        if (self.faults is not None and self.faults.alloc_shortfall(
+                "admit", self.stats["engine_steps"])):
             return False
-        self._queue.pop(0)
+        hashes = chain_hashes(prompt, self.block_size)
+        got = self.pool.reserve(hashes[:(plen - 1) // self.block_size],
+                                total)
+        if got is None:             # pool byte-identical: nothing to undo
+            return False
+        shared, fresh = got
         blocks = shared + fresh
         self._tables[i, :] = 0
         self._tables[i, :len(blocks)] = blocks
         self._slots[i] = _Slot(rid=req.rid, pos=plen,
-                               remaining=req.max_new, out=[],
+                               remaining=budget, out=[],
                                temperature=req.temperature,
-                               prompt=list(req.prompt),
+                               prompt=list(prompt),
                                filled=len(shared) * self.block_size,
-                               blocks=blocks, seq=self._admit_seq)
+                               blocks=blocks, seq=self._admit_seq,
+                               full_prompt=list(req.prompt),
+                               prior_out=list(entry.prior_out),
+                               priority=req.priority,
+                               deadline_at=entry.deadline_at)
         self._admit_seq += 1
-        self.stats["admitted"] += 1
+        if entry.is_resume:
+            self.stats["resumes"] += 1
+        else:
+            self.stats["admitted"] += 1
         self.stats["shared_blocks"] += len(shared)
         self.stats["blocks_hwm"] = max(self.stats["blocks_hwm"],
                                        self.pool.in_use())
         return True
+
+    def _admit_swapped(self, i: int, entry: _QEntry) -> bool:
+        """Resume a swapped-out request: re-allocate its block count,
+        restore the saved contents, and re-enter decode at the exact
+        position it left — no recompute, at the price of holding the
+        block bytes on the host while preempted."""
+        n = entry.swap["n"]
+        forced = (self.faults is not None and self.faults.alloc_shortfall(
+            "admit", self.stats["engine_steps"]))
+        fresh = None if forced else self.pool.alloc(n)
+        if fresh is None:
+            return False
+        self._swap_in(fresh, entry.swap["saved"])
+        req = entry.req
+        self._tables[i, :] = 0
+        self._tables[i, :n] = fresh
+        remaining = req.max_new - len(entry.prior_out) - len(entry.out)
+        self._slots[i] = _Slot(rid=req.rid, pos=entry.pos,
+                               remaining=remaining, out=list(entry.out),
+                               temperature=req.temperature,
+                               blocks=fresh, seq=self._admit_seq,
+                               full_prompt=list(req.prompt),
+                               prior_out=list(entry.prior_out),
+                               priority=req.priority,
+                               deadline_at=entry.deadline_at)
+        self._admit_seq += 1
+        self._last_tok = self._last_tok.at[i, 0].set(entry.out[-1])
+        self.stats["swap_ins"] += 1
+        self.stats["resumes"] += 1
+        self.stats["blocks_hwm"] = max(self.stats["blocks_hwm"],
+                                       self.pool.in_use())
+        return True
+
+    # ---- preemption ----
+
+    def _swap_out(self, blocks: list[int]):
+        """Gather the slot's block rows from every cache pool to host
+        numpy — the swap store.  Stacked-period leaves carry a leading
+        n_periods dim, so their block axis is 1."""
+        idx = jnp.asarray(blocks, jnp.int32)
+
+        def take(path, leaf):
+            names = [str(getattr(e, "key", getattr(e, "idx", "")))
+                     for e in path]
+            axis = 1 if "periods" in names else 0
+            return np.asarray(jnp.take(leaf, idx, axis=axis))
+        return jax.tree_util.tree_map_with_path(take, self.caches)
+
+    def _swap_in(self, blocks: list[int], saved) -> None:
+        idx = jnp.asarray(blocks, jnp.int32)
+
+        def put(path, leaf, rows):
+            names = [str(getattr(e, "key", getattr(e, "idx", "")))
+                     for e in path]
+            if "periods" in names:
+                return leaf.at[:, idx].set(rows.astype(leaf.dtype))
+            return leaf.at[idx].set(rows.astype(leaf.dtype))
+        self.caches = jax.tree_util.tree_map_with_path(
+            put, self.caches, saved)
+
+    def _pick_victim(self, i: int) -> int | None:
+        """Choose a slot to preempt so slot ``i`` can grow: lowest
+        priority first, then youngest (or oldest) admission seq.  None
+        when no candidate exists or every candidate outranks the grower
+        (the grower should yield instead of evicting its better)."""
+        s = self._slots[i]
+        sign = -1 if self.preempt_policy == "youngest" else 1
+        cands = [(c.priority, sign * c.seq, j)
+                 for j, c in enumerate(self._slots)
+                 if j != i and not c.free]
+        if not cands:
+            return None
+        prio, _, j = min(cands)
+        if prio > s.priority:
+            return None
+        return j
+
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i`` back to the queue HEAD.  Decoding slots under
+        preempt_mode='swap' keep their KV on the host and resume in
+        place; everything else (and every mid-prefill slot) drops its
+        blocks and resumes by re-prefilling prompt + generated prefix —
+        greedy decode makes the recompute token-for-token identical."""
+        s = self._slots[i]
+        gen = s.prior_out + s.out
+        req = Request(rid=s.rid, prompt=list(s.full_prompt),
+                      max_new=len(gen) + max(s.remaining, 0),
+                      temperature=s.temperature, priority=s.priority)
+        if self.preempt_mode == "swap" and s.decoding:
+            entry = _QEntry(req=req, deadline_at=s.deadline_at,
+                            prior_out=list(s.prior_out), out=list(s.out),
+                            pos=s.pos,
+                            swap={"saved": self._swap_out(s.blocks),
+                                  "n": len(s.blocks)})
+            self.stats["swap_outs"] += 1
+        else:
+            base = s.prompt if s.prompt is not None else (
+                s.full_prompt + s.prior_out)
+            entry = _QEntry(req=req, deadline_at=s.deadline_at,
+                            prior_out=s.prior_out + s.out,
+                            resume_prompt=list(base) + list(s.out))
+        for b in s.blocks:
+            self.pool.decref(b)
+        self._tables[i, :] = 0
+        self._slots[i] = _Slot()
+        self._queue.insert(0, entry)
+        self.stats["preemptions"] += 1
+
+    def _grow_decode_tables(self) -> None:
+        """Reactive growth, oldest admission first: every decoding slot's
+        table must cover position ``pos`` BEFORE the decode tick writes
+        there (out-of-table scatters clamp to the sentinel block and the
+        token's K/V would be silently lost).  Worst-case admission makes
+        this a no-op — the reach is already reserved."""
+        order = sorted((s.seq, i) for i, s in enumerate(self._slots)
+                       if s.decoding)
+        for seq, i in order:
+            s = self._slots[i]
+            if not s.decoding or s.seq != seq:
+                continue            # preempted by an earlier grower
+            self._grow_or_preempt(i)
+
+    def _grow_or_preempt(self, i: int) -> bool:
+        s = self._slots[i]
+        while True:
+            forced = (self.faults is not None and
+                      self.faults.alloc_shortfall(
+                          "grow", self.stats["engine_steps"]))
+            fresh = (None if forced
+                     else self.pool.ensure_reach(s.blocks, s.pos + 1))
+            if fresh is not None:
+                if fresh:
+                    self._tables[i, :len(s.blocks)] = s.blocks
+                    self.stats["blocks_hwm"] = max(
+                        self.stats["blocks_hwm"], self.pool.in_use())
+                return True
+            v = self._pick_victim(i)
+            if v is None:
+                self._preempt(i)    # nobody cheaper to evict: yield
+                return False
+            self._preempt(v)
+
+    def _validate_tables(self) -> None:
+        """Per-step integrity check: every occupied slot's device-bound
+        table row must mirror its host block list exactly.  A mismatch
+        (bit flip, buggy writer, injected corruption) retires the slot
+        with reason 'corrupt' — blocks are refunded from the HOST list,
+        which is the allocation truth."""
+        for i, s in enumerate(self._slots):
+            if s.free:
+                continue
+            row = self._tables[i]
+            want = np.zeros_like(row)
+            want[:len(s.blocks)] = s.blocks
+            if not np.array_equal(row, want):
+                self.stats["corrupt"] += 1
+                self._finish_slot(i, "corrupt")
 
     def _prefill_tick(self) -> None:
         """Advance ONE mid-prefill slot by ONE chunk.  Bounded work per
@@ -474,6 +782,13 @@ class ServeEngine:
             s.filled = c0 + len(real)
             self.stats["prefill_chunks"] += 1
             if s.filled >= len(s.prompt):
+                if self.faults is not None:
+                    logits = self.faults.prefill_logits(
+                        self.stats["engine_steps"], s.rid, logits)
+                if not bool(np.asarray(jnp.isfinite(logits).all())):
+                    self.stats["numeric"] += 1
+                    self._finish_slot(i, "numeric")
+                    return
                 # prefill complete: the prompt's full blocks are now
                 # written and immutable — index them for prefix sharing
                 n_full = len(s.prompt) // self.block_size
@@ -491,20 +806,33 @@ class ServeEngine:
                 self._retire(i)
             return                          # one chunk per step
 
+    def _finish_slot(self, i: int, reason: str) -> None:
+        """Unconditional retirement with a reason code: output so far is
+        delivered (prior incarnations included), blocks refunded."""
+        s = self._slots[i]
+        self.finished[s.rid] = s.prior_out + s.out
+        self.reasons[s.rid] = reason
+        if self.cache_mode == "paged":
+            for b in s.blocks:
+                self.pool.decref(b)
+            self._tables[i, :] = 0
+        self._slots[i] = _Slot()
+
     def _retire(self, i: int) -> None:
         s = self._slots[i]
         if s.free:
             return
-        done = (s.remaining <= 0 or s.pos >= self.max_seq - 1 or
-                (self.eos_id is not None and s.out and
-                 s.out[-1] == self.eos_id))
-        if done:
-            self.finished[s.rid] = s.out
-            if self.cache_mode == "paged":
-                for b in s.blocks:
-                    self.pool.decref(b)
-                self._tables[i, :] = 0
-            self._slots[i] = _Slot()
+        eos = (self.eos_id is not None and s.out and
+               s.out[-1] == self.eos_id)
+        if eos:
+            reason = "eos"
+        elif s.remaining <= 0:
+            reason = "max_new"
+        elif s.pos >= self.max_seq - 1:
+            reason = "max_seq"
+        else:
+            return
+        self._finish_slot(i, reason)
 
     @property
     def active(self) -> int:
@@ -516,9 +844,17 @@ class ServeEngine:
     # ---- one engine step = admit + prefill chunk + one lockstep decode ----
 
     def step(self) -> None:
+        self.stats["engine_steps"] += 1
+        if self.cache_mode == "paged":
+            if self.faults is not None:
+                self.faults.corrupt_tables(self.stats["engine_steps"],
+                                           self._tables, self._slots)
+            self._validate_tables()
+        self._expire_running_deadlines()
         self._admit()
         if self.cache_mode == "paged":
             self._prefill_tick()
+            self._grow_decode_tables()
         decoding = [s.decoding for s in self._slots]
         if not any(decoding):
             return
@@ -536,11 +872,25 @@ class ServeEngine:
             else:
                 logits, self.caches = self._decode(
                     self.params, self.caches, self._last_tok, pos)
+        if self.faults is not None:
+            logits = self.faults.decode_logits(
+                self.stats["engine_steps"],
+                [s.rid if s.decoding else -1 for s in self._slots], logits)
+        # numeric sentry: one (B,) host pull per tick.  A non-finite row
+        # quarantines ONLY that slot (reason 'numeric', blocks refunded);
+        # the per-slot sampling keys below are split from the step key by
+        # slot INDEX, so the neighbours' token streams are bitwise
+        # unaffected by the quarantine.
+        finite = np.asarray(jnp.isfinite(logits).all(axis=-1))
         self.stats["decode_steps"] += 1
         self._key, k = jax.random.split(self._key)
         keys = jax.random.split(k, self.n_slots)
         for i, s in enumerate(self._slots):
             if not s.decoding:
+                continue
+            if not bool(finite[i]):
+                self.stats["numeric"] += 1
+                self._finish_slot(i, "numeric")
                 continue
             tok = int(sample_token(keys[i], logits[i], s.temperature))
             s.out.append(tok)
@@ -557,4 +907,19 @@ class ServeEngine:
         while self.pending() and steps < max_steps:
             self.step()
             steps += 1
+        if self.pending():
+            # max_steps exhausted: flush everything still live with
+            # reason 'starved' (partial output delivered, blocks
+            # refunded) and SAY SO — the old contract silently returned
+            # a short dict and leaked the pool
+            starved = []
+            for i, s in enumerate(self._slots):
+                if not s.free:
+                    starved.append(s.rid)
+                    self._finish_slot(i, "starved")
+            while self._queue:
+                e = self._queue.pop(0)
+                starved.append(e.req.rid)
+                self._finish_queued(e, "starved")
+            self.stats["starved"].extend(starved)
         return dict(self.finished)

@@ -1,0 +1,390 @@
+"""Deterministic fault injection for the serve engine:
+``python -m repro.serve.faults --soak | --fixture NAME``.
+
+Mirrors the ``analysis.audit --fixture`` pattern: every failure mode the
+engine claims to contain has a seeded injector here, and CI proves the
+containment machinery still fires by running each fixture and demanding
+the documented exit code.
+
+  exit 0   --soak: chaos soak invariants held
+  exit 1   --fixture: the seeded fault was detected/contained as intended
+  exit 2   --fixture: the fault ran but the engine did NOT contain it
+           (the sentry/validator has gone blind)
+
+The injector is pure host-side state consulted by engine hooks — no
+monkeypatching, no randomness outside the seeded PRNG:
+
+  alloc_shortfall(where, step)   force a pool shortfall at admission
+                                 ('admit') or decode growth ('grow');
+                                 scheduled hits are ONE-SHOT so the
+                                 engine's preempt-retry loop can succeed
+                                 and never livelocks on the injector
+  decode_logits(step, rids, x)   poison one decoding row with NaN
+  prefill_logits(step, rid, x)   poison a prefill-completion row
+  corrupt_tables(step, t, slots) scribble an out-of-range block id into
+                                 an occupied slot's table row
+
+``affected`` collects the rids whose output the faults changed — the
+soak's bitwise-unaffected invariant is checked against its complement.
+
+The chaos soak runs the SAME seeded workload twice — fault-free, then
+with every injector armed and the pool sized at ``pool_frac`` of the
+worst-case block demand — and checks: no deadlock (nothing starved),
+``pool.in_use() == 0`` after drain, every request terminated with a
+reason code, and every unaffected request's tokens identical to the
+fault-free run (preempted/resumed requests INCLUDED — preemption must
+be invisible).
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+
+FIXTURES = ("nan_logits", "pool_exhaustion", "preempt_storm",
+            "table_corrupt", "oversize_prompt")
+
+
+class FaultInjector:
+    """Seeded, scheduled fault source consulted by engine hooks."""
+
+    def __init__(self, seed: int = 0, *,
+                 shortfall_admit_steps=(), shortfall_grow_steps=(),
+                 storm_rate: float = 0.0, storm_until: int = 0,
+                 nan_decode_step: int | None = None,
+                 nan_prefill_step: int | None = None,
+                 corrupt_step: int | None = None):
+        self._rng = random.Random(seed)
+        self._admit_steps = set(shortfall_admit_steps)
+        self._grow_steps = set(shortfall_grow_steps)
+        self.storm_rate = storm_rate
+        self.storm_until = storm_until
+        self._storm_fired: set[int] = set()
+        self.nan_decode_step = nan_decode_step
+        self.nan_prefill_step = nan_prefill_step
+        self.corrupt_step = corrupt_step
+        self.affected: set[int] = set()   # rids whose OUTPUT faults changed
+        self.log: list[tuple] = []
+
+    # ---- engine hooks ----
+
+    def alloc_shortfall(self, where: str, step: int) -> bool:
+        """Force ``pool.alloc``/``ensure_reach`` to report a shortfall.
+        Scheduled steps fire once and are consumed — the engine retries
+        after preempting a victim, and the retry must see the real pool.
+        The storm mode fires at most once per engine step (seeded coin)
+        until ``storm_until``: every hit forces one preemption, but a
+        preemption does not change any request's final tokens, so storm
+        targets are NOT marked affected."""
+        sched = self._admit_steps if where == "admit" else self._grow_steps
+        if step in sched:
+            sched.discard(step)
+            self.log.append(("shortfall", where, step))
+            return True
+        if (where == "grow" and step <= self.storm_until
+                and step not in self._storm_fired
+                and self._rng.random() < self.storm_rate):
+            self._storm_fired.add(step)
+            self.log.append(("storm", where, step))
+            return True
+        return False
+
+    def decode_logits(self, step: int, rids: list[int], logits):
+        """NaN-poison the first decoding row at (or after, if no row is
+        decoding exactly then) ``nan_decode_step``.  One-shot."""
+        if self.nan_decode_step is None or step < self.nan_decode_step:
+            return logits
+        rows = [i for i, r in enumerate(rids) if r >= 0]
+        if not rows:
+            return logits
+        import jax.numpy as jnp
+        self.nan_decode_step = None
+        i = rows[0]
+        self.affected.add(rids[i])
+        self.log.append(("nan_decode", step, rids[i]))
+        return logits.at[i].set(jnp.nan)
+
+    def prefill_logits(self, step: int, rid: int, logits):
+        if self.nan_prefill_step is None or step < self.nan_prefill_step:
+            return logits
+        import jax.numpy as jnp
+        self.nan_prefill_step = None
+        self.affected.add(rid)
+        self.log.append(("nan_prefill", step, rid))
+        return jnp.full_like(logits, jnp.nan)
+
+    def corrupt_tables(self, step: int, tables, slots) -> None:
+        """Scribble an impossible block id into the first occupied
+        slot's table row (host array, pre-validation).  One-shot."""
+        if self.corrupt_step is None or step < self.corrupt_step:
+            return
+        for i, s in enumerate(slots):
+            if not s.free:
+                self.corrupt_step = None
+                tables[i, 0] = 2 ** 20
+                self.affected.add(s.rid)
+                self.log.append(("corrupt", step, s.rid))
+                return
+
+
+# ---------------------------------------------------------------------------
+# workload + soak
+# ---------------------------------------------------------------------------
+
+
+def _workload(seed: int, n_requests: int, max_seq: int, vocab: int):
+    """Seeded mixed workload: ragged lengths, a shared prefix family
+    (exercises prefix-cache refcounts under preemption), varied
+    max_new."""
+    rng = random.Random(seed)
+    from .engine import Request
+    base = [rng.randrange(1, vocab) for _ in range(max_seq)]
+    reqs = []
+    for i in range(n_requests):
+        if rng.random() < 0.35:         # prefix family
+            plen = rng.randrange(10, min(34, max_seq - 12))
+            prompt = base[:plen]
+        else:
+            plen = rng.randrange(4, min(40, max_seq - 12))
+            prompt = [rng.randrange(1, vocab) for _ in range(plen)]
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new=rng.randrange(4, 11)))
+    return reqs
+
+
+def _mk_engine(cfg, params, *, seed, num_blocks, faults=None,
+               n_slots=3, max_seq=64, preempt_mode="recompute"):
+    from .engine import ServeEngine
+    return ServeEngine(cfg, params, n_slots=n_slots, max_seq=max_seq,
+                       cache_mode="paged", prefill_chunk=16, seed=seed,
+                       num_blocks=num_blocks, admission="reactive",
+                       preempt_mode=preempt_mode, faults=faults)
+
+
+def _setup(seed: int, n_requests: int = 10, max_seq: int = 64,
+           pool_frac: float = 0.5, n_slots: int = 3):
+    import jax
+
+    from repro.configs import registry
+    from repro.kernels import tiling
+    from repro.models.transformer import init_lm
+
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    reqs = _workload(seed, n_requests, max_seq, cfg.vocab)
+    bs = tiling.paged_block_size(max_seq)
+    worst = max(tiling.cdiv(min(len(r.prompt) + r.max_new, max_seq), bs)
+                for r in reqs)
+    # pool_frac of the worst-case demand of a full slot complement,
+    # floored so a single request always fits (the submit guard)
+    num_blocks = max(worst, int(pool_frac * n_slots * worst)) + 1
+    return cfg, params, reqs, num_blocks
+
+
+def chaos_soak(seed: int = 0, *, pool_frac: float = 0.5,
+               n_requests: int = 10, n_slots: int = 3, max_seq: int = 64,
+               preempt_mode: str = "recompute",
+               max_steps: int = 4000) -> dict:
+    """Fault-free run, then the same workload with every injector armed.
+    Returns a report dict with ``ok`` and the violated invariants."""
+    cfg, params, reqs, num_blocks = _setup(
+        seed, n_requests=n_requests, max_seq=max_seq,
+        pool_frac=pool_frac, n_slots=n_slots)
+
+    base = _mk_engine(cfg, params, seed=seed, num_blocks=num_blocks,
+                      n_slots=n_slots, max_seq=max_seq,
+                      preempt_mode=preempt_mode)
+    base_out = base.run(list(reqs), max_steps=max_steps)
+
+    inj = FaultInjector(seed, storm_rate=0.5, storm_until=25,
+                        shortfall_admit_steps=(3, 7),
+                        nan_decode_step=12, corrupt_step=20)
+    eng = _mk_engine(cfg, params, seed=seed, num_blocks=num_blocks,
+                     n_slots=n_slots, max_seq=max_seq,
+                     preempt_mode=preempt_mode, faults=inj)
+    from .engine import Request
+    oversize_rejected = False
+    try:
+        eng.submit(Request(rid=10 ** 6,
+                           prompt=list(range(1, max_seq + 2)), max_new=1))
+    except ValueError:
+        oversize_rejected = True
+    out = eng.run(list(reqs), max_steps=max_steps)
+
+    violations = []
+    if not oversize_rejected:
+        violations.append("oversized prompt was admitted")
+    if eng.stats["starved"] or base.stats["starved"]:
+        violations.append(f"deadlock/starvation: {eng.stats['starved']} "
+                          f"(baseline {base.stats['starved']})")
+    for e, tag in ((base, "baseline"), (eng, "armed")):
+        if e.pool.in_use() != 0:
+            violations.append(f"{tag}: {e.pool.in_use()} blocks leaked")
+    for r in reqs:
+        if r.rid not in out or r.rid not in eng.reasons:
+            violations.append(f"rid {r.rid} never terminated with a reason")
+    for r in reqs:
+        if r.rid in inj.affected:
+            continue
+        if out.get(r.rid) != base_out.get(r.rid):
+            violations.append(
+                f"rid {r.rid} unaffected by faults but tokens diverged: "
+                f"{out.get(r.rid)} != {base_out.get(r.rid)}")
+    return {"ok": not violations, "violations": violations,
+            "stats": {k: v for k, v in eng.stats.items()
+                      if k != "admit_time_s"},
+            "affected": sorted(inj.affected),
+            "reasons": dict(eng.reasons),
+            "injections": len(inj.log)}
+
+
+# ---------------------------------------------------------------------------
+# fixtures: each proves one containment path still fires
+# ---------------------------------------------------------------------------
+
+
+def _fixture_nan_logits(seed: int):
+    """NaN decode logits at step k must quarantine exactly one slot
+    (reason 'numeric') while its neighbours' tokens stay bitwise equal
+    to the fault-free run."""
+    cfg, params, reqs, _ = _setup(seed, n_requests=4)
+    base_out = _mk_engine(cfg, params, seed=seed,
+                          num_blocks=None).run(list(reqs))
+    inj = FaultInjector(seed, nan_decode_step=6)
+    eng = _mk_engine(cfg, params, seed=seed, num_blocks=None, faults=inj)
+    out = eng.run(list(reqs))
+    quarantined = [r for r, why in eng.reasons.items() if why == "numeric"]
+    ok = (len(quarantined) == 1 and quarantined[0] in inj.affected
+          and eng.pool.in_use() == 0
+          and all(out[r.rid] == base_out[r.rid] for r in reqs
+                  if r.rid not in inj.affected))
+    return ok, {"quarantined": quarantined, "affected": sorted(inj.affected),
+                "numeric": eng.stats["numeric"]}
+
+
+def _fixture_pool_exhaustion(seed: int):
+    """A pool that only fits one worst-case request at a time must block
+    admission (backpressure, counted) yet drain every request with a
+    reason and zero leaked blocks."""
+    cfg, params, reqs, _ = _setup(seed, n_requests=6)
+    from repro.kernels import tiling
+    bs = tiling.paged_block_size(64)
+    worst = max(tiling.cdiv(min(len(r.prompt) + r.max_new, 64), bs)
+                for r in reqs)
+    eng = _mk_engine(cfg, params, seed=seed, num_blocks=worst + 1)
+    out = eng.run(list(reqs))
+    ok = (eng.stats["admit_blocked"] > 0 and eng.pool.in_use() == 0
+          and all(r.rid in out and r.rid in eng.reasons for r in reqs)
+          and not eng.stats["starved"])
+    return ok, {"admit_blocked": eng.stats["admit_blocked"],
+                "reasons": dict(eng.reasons)}
+
+
+def _fixture_preempt_storm(seed: int):
+    """Every decode growth forced short for the first 15 steps: the
+    engine must preempt and resume repeatedly, and the storm must be
+    INVISIBLE in the tokens (greedy recompute is exact)."""
+    cfg, params, reqs, _ = _setup(seed, n_requests=5)
+    base_out = _mk_engine(cfg, params, seed=seed, num_blocks=None
+                          ).run(list(reqs))
+    inj = FaultInjector(seed, storm_rate=1.0, storm_until=15)
+    eng = _mk_engine(cfg, params, seed=seed, num_blocks=None, faults=inj)
+    out = eng.run(list(reqs))
+    ok = (eng.stats["preemptions"] > 0 and eng.stats["resumes"] > 0
+          and eng.pool.in_use() == 0 and out == base_out)
+    return ok, {"preemptions": eng.stats["preemptions"],
+                "resumes": eng.stats["resumes"],
+                "match": out == base_out}
+
+
+def _fixture_table_corrupt(seed: int):
+    """An out-of-range block id scribbled into a live table row must be
+    caught by the per-step validator before any kernel consumes it."""
+    cfg, params, reqs, _ = _setup(seed, n_requests=4)
+    inj = FaultInjector(seed, corrupt_step=8)
+    eng = _mk_engine(cfg, params, seed=seed, num_blocks=None, faults=inj)
+    out = eng.run(list(reqs))
+    corrupted = [r for r, why in eng.reasons.items() if why == "corrupt"]
+    ok = (len(corrupted) == 1 and corrupted[0] in inj.affected
+          and eng.stats["corrupt"] == 1 and eng.pool.in_use() == 0
+          and all(r.rid in out for r in reqs))
+    return ok, {"corrupted": corrupted, "affected": sorted(inj.affected)}
+
+
+def _fixture_oversize_prompt(seed: int):
+    """A prompt past max_seq (and one past the pool's worst-case reach)
+    must be rejected at submit, leaving the engine state untouched."""
+    cfg, params, reqs, num_blocks = _setup(seed, n_requests=2)
+    from .engine import Request
+    eng = _mk_engine(cfg, params, seed=seed, num_blocks=num_blocks)
+    rejected = 0
+    try:                               # past max_seq
+        eng.submit(Request(rid=100, prompt=list(range(1, 66)), max_new=1))
+    except ValueError:
+        rejected += 1
+    # within max_seq but past a small pool's worst-case reach
+    small = _mk_engine(cfg, params, seed=seed, num_blocks=3)
+    try:
+        small.submit(Request(rid=101, prompt=list(range(1, 11)),
+                             max_new=30))
+    except ValueError:
+        rejected += 1
+    out = eng.run(list(reqs))
+    ok = (rejected == 2 and 100 not in out and 101 not in out
+          and all(r.rid in out for r in reqs)
+          and eng.pool.in_use() == 0)
+    return ok, {"rejected": rejected}
+
+
+_FIXTURE_RUNNERS = {
+    "nan_logits": _fixture_nan_logits,
+    "pool_exhaustion": _fixture_pool_exhaustion,
+    "preempt_storm": _fixture_preempt_storm,
+    "table_corrupt": _fixture_table_corrupt,
+    "oversize_prompt": _fixture_oversize_prompt,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve.faults",
+        description="deterministic fault injection for the serve engine "
+                    "(chaos soak + seeded containment fixtures)")
+    ap.add_argument("--soak", action="store_true",
+                    help="run the chaos soak; exit 0 iff invariants held")
+    ap.add_argument("--fixture", choices=FIXTURES,
+                    help="run one seeded fault; exit 1 iff contained as "
+                         "documented, 2 if the engine has gone blind")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pool-frac", type=float, default=0.5)
+    ap.add_argument("--preempt-mode", default="recompute",
+                    choices=("recompute", "swap"))
+    args = ap.parse_args(argv)
+    if not args.soak and not args.fixture:
+        ap.error("pick --soak or --fixture NAME")
+
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    if args.soak:
+        report = chaos_soak(args.seed, pool_frac=args.pool_frac,
+                            preempt_mode=args.preempt_mode)
+        print(f"chaos soak: {'OK' if report['ok'] else 'FAIL'} — "
+              f"{report['injections']} injections, "
+              f"affected rids {report['affected']}, "
+              f"stats {report['stats']}")
+        for v in report["violations"]:
+            print(f"  VIOLATION: {v}", file=sys.stderr)
+        return 0 if report["ok"] else 1
+
+    ok, detail = _FIXTURE_RUNNERS[args.fixture](args.seed)
+    if ok:
+        print(f"fixture {args.fixture!r} contained as intended: {detail}")
+        return 1
+    print(f"fixture {args.fixture!r} NOT contained — the engine has "
+          f"gone blind: {detail}", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

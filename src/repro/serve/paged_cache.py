@@ -90,6 +90,25 @@ class BlockPool:
         self.hwm = max(self.hwm, self.in_use())
         return out
 
+    def ensure_reach(self, held: list[int], tokens: int) -> list[int] | None:
+        """Grow ``held`` (a request's block list, mutated in place) until
+        it reaches ``tokens`` positions.  Returns the newly allocated
+        blocks ([] when the reach is already covered) or None on
+        shortfall — all-or-nothing, like :meth:`alloc`, and ``held`` is
+        untouched on failure.  This is the reactive-admission growth
+        primitive: decode ticks call it right before writing position
+        ``tokens - 1`` so the table always covers the scatter target
+        (out-of-table writes clamp to the sentinel and silently lose
+        data)."""
+        need = -(-tokens // self.block_size) - len(held)
+        if need <= 0:
+            return []
+        fresh = self.alloc(need)
+        if fresh is None:
+            return None
+        held.extend(fresh)
+        return fresh
+
     def incref(self, block: int) -> None:
         self._ref[block] += 1
 
@@ -128,6 +147,43 @@ class BlockPool:
             out.append(b)
         self.hwm = max(self.hwm, self.in_use())
         return out
+
+    def peek_prefix(self, hashes) -> list[int]:
+        """Longest indexed run of ``hashes`` as blocks — NO references
+        taken, nothing mutated.  The feasibility half of :meth:`reserve`."""
+        out = []
+        for h in hashes:
+            b = self._hash_to_block.get(h)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def reserve(self, hashes, total: int):
+        """Atomic admission: take references on the longest indexed
+        prefix of ``hashes`` AND allocate the remaining
+        ``total - len(prefix)`` fresh blocks, or return None with the
+        pool BYTE-IDENTICAL to before the call.
+
+        Feasibility is checked on a reference-free peek first: matched
+        blocks sitting in the cached LRU would be revived (leaving the
+        evictable set), so they are subtracted from capacity before the
+        fresh demand is compared.  The old shape — match_prefix, alloc,
+        decref-rollback on shortfall — restored every refcount but
+        rotated the revived blocks to the LRU tail, so a failed
+        admission silently reordered evictions."""
+        shared = self.peek_prefix(hashes)
+        need = total - len(shared)
+        revive = sum(1 for b in shared if b in self._cached)
+        if len(self._free) + len(self._cached) - revive < need:
+            return None
+        shared = self.match_prefix(hashes)
+        fresh = self.alloc(need)
+        if fresh is None:           # unreachable: feasibility was checked
+            for b in shared:
+                self.decref(b)
+            return None
+        return shared, fresh
 
     def register(self, hashes, blocks) -> None:
         """Index ``blocks`` (just-prefilled FULL prompt blocks) under

@@ -88,6 +88,25 @@ def test_serve_rules_catch_a_cache_copy():
         schema.validate(d, schema.SERVE_SPEC, schema.SERVE_RULES)
 
 
+def test_serve_rules_catch_a_concurrency_tie_under_pressure():
+    """The pressure rows' whole claim is reactive admission buying
+    strictly more concurrency at the same pool — a tie must fail."""
+    path = os.path.join(REPO, "BENCH_serve.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_serve.json not committed")
+    with open(path) as fh:
+        d = json.load(fh)
+    d["pressure"]["modes"]["reactive"]["concurrent_hwm"] = \
+        d["pressure"]["modes"]["worst_case"]["concurrent_hwm"]
+    with pytest.raises(AssertionError, match="strictly higher"):
+        schema.validate(d, schema.SERVE_SPEC, schema.SERVE_RULES)
+    with open(path) as fh:
+        d = json.load(fh)
+    d["pressure"]["modes"]["reactive"]["leaked_blocks"] = 1
+    with pytest.raises(AssertionError, match="zero blocks leaked"):
+        schema.validate(d, schema.SERVE_SPEC, schema.SERVE_RULES)
+
+
 # ---------------------------------------------------------------------------
 # int-purity: clean tree, caught fixture, no false positive on the
 # finishing divide

@@ -1,0 +1,338 @@
+"""Serving under pressure: reactive admission + preemption (recompute
+and swap), head-of-line skip-ahead, deadlines, the numeric sentry,
+starvation surfacing, table-corruption containment, and the
+byte-identical admission-rollback property.
+
+The preemption parity tests are the load-bearing ones: a pool sized
+well below the workload's worst-case demand must force preemptions, and
+the outputs must still be TOKEN-FOR-TOKEN identical to an ample-pool
+run — greedy decode makes recompute-on-resume exact, and swap restores
+the very bytes it saved.
+
+The rollback property test is hypothesis-compatible in the
+test_paged_cache.py style: drawn by hypothesis when the package exists,
+seeded PRNG otherwise."""
+import random
+
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.kernels import tiling
+from repro.models.transformer import init_lm
+from repro.serve import Request, ServeEngine
+from repro.serve.engine import _QEntry
+from repro.serve.faults import FaultInjector, chaos_soak
+from repro.serve.paged_cache import BlockPool, chain_hashes
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.reduced_config("qwen1.5-0.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk_reqs():
+    return [Request(rid=0, prompt=list(range(5, 25)), max_new=6),
+            Request(rid=1, prompt=list(range(7, 40)), max_new=8),
+            Request(rid=2, prompt=[3, 1, 4, 1, 5, 9, 2, 6], max_new=5),
+            Request(rid=3, prompt=list(range(5, 25)), max_new=4)]
+
+
+def _paged(cfg, params, **kw):
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("prefill_chunk", 16)
+    kw.setdefault("seed", 0)
+    return ServeEngine(cfg, params, cache_mode="paged", **kw)
+
+
+# ---------------- preemption parity ----------------
+
+def test_tight_pool_preempts_and_matches_ample(model):
+    """Pool well under worst-case demand: the engine must preempt (the
+    ample run never does) yet produce identical tokens, terminate every
+    request with a reason, and leak nothing."""
+    cfg, params = model
+    ample = _paged(cfg, params)
+    out_a = ample.run(_mk_reqs())
+    assert ample.stats["preemptions"] == 0
+    tight = _paged(cfg, params, num_blocks=9)
+    out_t = tight.run(_mk_reqs())
+    assert out_t == out_a
+    assert tight.stats["preemptions"] > 0
+    assert tight.stats["resumes"] > 0
+    assert tight.pool.in_use() == 0
+    assert all(tight.reasons[r.rid] for r in _mk_reqs())
+    assert not tight.stats["starved"]
+
+
+def test_swap_preemption_matches_recompute(model):
+    """preempt_mode='swap' restores the saved block bytes instead of
+    re-prefilling — same tokens, swap counters move, nothing leaks."""
+    cfg, params = model
+    base = _paged(cfg, params).run(_mk_reqs())
+    sw = _paged(cfg, params, num_blocks=9, preempt_mode="swap")
+    out = sw.run(_mk_reqs())
+    assert out == base
+    assert sw.stats["preemptions"] > 0
+    assert sw.stats["swap_outs"] > 0
+    assert sw.stats["swap_ins"] > 0
+    assert sw.pool.in_use() == 0
+
+
+def test_reactive_beats_worst_case_concurrency(model):
+    """At the same undersized pool, reactive admission reaches a
+    strictly higher concurrency high-water than worst-case reservation
+    — the whole point of reserving less up front — while producing the
+    same tokens.  Three decode-heavy requests each have a worst-case
+    reach of 6 blocks (16 prompt + 30 new = 46 tokens, bs=8): the
+    8-data-block pool holds only ONE worst-case reservation at a time,
+    but all three 2-block prompt reaches side by side."""
+    cfg, params = model
+    bs = tiling.paged_block_size(64)
+    reqs = [Request(rid=i, prompt=[100 * i + j + 1 for j in range(16)],
+                    max_new=30) for i in range(3)]
+    assert all(tiling.cdiv(len(r.prompt) + r.max_new, bs) == 6
+               for r in reqs)
+    hwm, outs = {}, {}
+    for adm in ("worst_case", "reactive"):
+        eng = _paged(cfg, params, num_blocks=9, admission=adm)
+        for r in reqs:
+            eng.submit(Request(**vars(r)))
+        h = 0
+        while eng.pending():
+            eng.step()
+            h = max(h, eng.active)
+        hwm[adm], outs[adm] = h, dict(eng.finished)
+        assert eng.pool.in_use() == 0, adm
+    assert outs["reactive"] == outs["worst_case"]
+    assert hwm["reactive"] > hwm["worst_case"], hwm
+
+
+def test_priority_protects_high_priority_victim(model):
+    """Preemption victims are chosen lowest-priority-first, and a grower
+    never evicts a strictly higher-priority slot — it yields instead."""
+    cfg, params = model
+    reqs = [Request(rid=0, prompt=list(range(5, 25)), max_new=6,
+                    priority=1),
+            Request(rid=1, prompt=list(range(7, 40)), max_new=8),
+            Request(rid=2, prompt=[3, 1, 4, 1, 5, 9, 2, 6], max_new=5),
+            Request(rid=3, prompt=list(range(5, 25)), max_new=4)]
+    eng = _paged(cfg, params, num_blocks=9)
+    out = eng.run([Request(**vars(r)) for r in reqs])
+    assert eng.stats["preemptions"] > 0
+    # the high-priority request matches the ample run regardless
+    ample = _paged(cfg, params).run([Request(**vars(r)) for r in reqs])
+    assert out == ample
+    assert eng.pool.in_use() == 0
+
+
+# ---------------- satellite: starvation surfaced ----------------
+
+def test_starvation_is_surfaced_not_silent(model):
+    """max_steps exhaustion must flush everything still live with
+    reason 'starved', deliver partial output, refund every block, and
+    list the rids in stats['starved'] — it used to silently return a
+    short dict and leak the pool."""
+    cfg, params = model
+    eng = _paged(cfg, params)
+    out = eng.run(_mk_reqs(), max_steps=3)
+    assert eng.stats["starved"]
+    for r in _mk_reqs():
+        assert r.rid in out
+        assert r.rid in eng.reasons
+    assert all(eng.reasons[rid] == "starved"
+               for rid in eng.stats["starved"])
+    assert eng.pool.in_use() == 0
+    assert eng.pending() == 0
+
+
+# ---------------- satellite: head-of-line skip-ahead ----------------
+
+def test_hol_skip_ahead_admits_small_past_blocked_giant(model):
+    """A small request admits past a pool-blocked giant within the
+    skip-ahead window (counted in stats['hol_skips']); the giant still
+    completes once capacity frees up."""
+    cfg, params = model
+    eng = _paged(cfg, params, n_slots=2, num_blocks=8)
+    eng.submit(Request(rid=0, prompt=list(range(1, 31)), max_new=4))
+    while not any(s.decoding for s in eng._slots):
+        eng.step()                        # rid 0 holds 4 of 7 blocks
+    # disjoint from rid 0's prompt: a shared prefix would collapse the
+    # giant's fresh-block demand below the pool and let it admit
+    eng.submit(Request(rid=1, prompt=list(range(100, 140)), max_new=4))
+    eng.submit(Request(rid=2, prompt=[9, 8, 7], max_new=3))
+    eng.step()
+    assert eng.stats["hol_skips"] >= 1    # rid 2 skipped past rid 1
+    assert eng._slots[1].rid == 2 or eng._slots[0].rid == 2
+    out = eng.run([])
+    assert sorted(out) == [0, 1, 2]       # the giant was not starved
+    assert all(len(out[r]) == n for r, n in ((0, 4), (1, 4), (2, 3)))
+    assert eng.pool.in_use() == 0
+
+
+def test_hol_window_one_preserves_strict_fcfs(model):
+    """hol_window=1 restores the old strict head-of-line behavior."""
+    cfg, params = model
+    eng = _paged(cfg, params, n_slots=2, num_blocks=8, hol_window=1)
+    eng.submit(Request(rid=0, prompt=list(range(1, 31)), max_new=4))
+    while not any(s.decoding for s in eng._slots):
+        eng.step()
+    eng.submit(Request(rid=1, prompt=list(range(100, 140)), max_new=4))
+    eng.submit(Request(rid=2, prompt=[9, 8, 7], max_new=3))
+    eng.step()
+    assert eng.stats["hol_skips"] == 0
+    out = eng.run([])
+    assert sorted(out) == [0, 1, 2]
+
+
+# ---------------- deadlines ----------------
+
+def test_deadline_expires_queued_and_running(model):
+    cfg, params = model
+    clk = {"t": 0.0}
+    eng = _paged(cfg, params, n_slots=2, clock=lambda: clk["t"])
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=50,
+                       deadline_s=5.0))
+    eng.submit(Request(rid=1, prompt=[4, 5, 6], max_new=4))
+    for _ in range(6):
+        eng.step()
+    assert len(eng._slots[0].out) > 0     # rid 0 was decoding
+    clk["t"] = 10.0                       # past rid 0's budget
+    eng.submit(Request(rid=2, prompt=[7, 8], max_new=5, deadline_s=-1.0))
+    eng.step()
+    assert eng.reasons[0] == "deadline"
+    assert 0 < len(eng.finished[0]) < 50  # partial output delivered
+    assert eng.reasons[2] == "deadline"   # expired while queued
+    assert eng.finished[2] == []
+    out = eng.run([])                     # rid 1 unaffected
+    assert eng.reasons[1] in ("max_new", "eos")
+    assert len(out[1]) <= 4
+    assert eng.pool.in_use() == 0
+    assert eng.stats["deadlines"] == 2
+
+
+# ---------------- numeric sentry + table corruption ----------------
+
+def test_numeric_sentry_quarantines_single_slot(model):
+    """NaN logits on one decode row retire ONLY that slot (reason
+    'numeric', blocks refunded); every other request's tokens are
+    bitwise identical to the fault-free run."""
+    cfg, params = model
+    base = _paged(cfg, params).run(_mk_reqs())
+    inj = FaultInjector(0, nan_decode_step=6)
+    eng = _paged(cfg, params, faults=inj)
+    out = eng.run(_mk_reqs())
+    bad = [r for r, why in eng.reasons.items() if why == "numeric"]
+    assert bad == sorted(inj.affected) and len(bad) == 1
+    assert eng.stats["numeric"] == 1
+    for r in _mk_reqs():
+        if r.rid not in inj.affected:
+            assert out[r.rid] == base[r.rid], r.rid
+    assert eng.pool.in_use() == 0
+
+
+def test_table_corruption_detected_and_contained(model):
+    cfg, params = model
+    inj = FaultInjector(0, corrupt_step=4)
+    eng = _paged(cfg, params, faults=inj)
+    out = eng.run(_mk_reqs())
+    bad = [r for r, why in eng.reasons.items() if why == "corrupt"]
+    assert bad == sorted(inj.affected) and len(bad) == 1
+    assert eng.stats["corrupt"] == 1
+    assert sorted(out) == [0, 1, 2, 3]    # everyone terminated
+    assert eng.pool.in_use() == 0
+
+
+# ---------------- chaos soak ----------------
+
+def test_chaos_soak_invariants(model):
+    report = chaos_soak(seed=0)
+    assert report["ok"], report["violations"]
+    assert report["stats"]["preemptions"] > 0     # pressure was real
+    assert report["injections"] > 0
+
+
+# ---------------- satellite: admission rollback property ----------------
+
+def _snapshot(pool: BlockPool):
+    """Full observable pool state, LRU order included."""
+    return (dict(pool._ref), list(pool._free), list(pool._cached),
+            dict(pool._hash_to_block), dict(pool._block_hash))
+
+
+def _rollback_property(seed: int):
+    """A failed reserve() (the _admit_paged shortfall path) must leave
+    the pool BYTE-IDENTICAL: refcounts, free list, cached-LRU order,
+    and both prefix indexes."""
+    rng = random.Random(seed)
+    pool = BlockPool(num_blocks=rng.randint(4, 12), block_size=4)
+    registered = []
+    for _ in range(rng.randint(0, 3)):
+        n = rng.randint(1, 3)
+        blocks = pool.alloc(n)
+        if blocks is None:
+            break
+        toks = [rng.randrange(1000) for _ in range(4 * n)]
+        pool.register(chain_hashes(toks, 4), blocks)
+        registered.append(toks)
+        if rng.random() < 0.6:
+            for b in blocks:
+                pool.decref(b)            # park in the cached LRU
+    if pool.available() > 1:
+        pool.alloc(rng.randint(0, pool.available() - 1))   # hog
+    snap = _snapshot(pool)
+    if registered and rng.random() < 0.7:
+        prompt = list(rng.choice(registered)) + [rng.randrange(1000)]
+    else:
+        prompt = [rng.randrange(1000) for _ in range(rng.randint(1, 9))]
+    hashes = chain_hashes(prompt, 4)[:(len(prompt) - 1) // 4]
+    total = len(hashes) + rng.randint(1, pool.num_blocks)
+    got = pool.reserve(hashes, total)
+    if got is None:
+        assert _snapshot(pool) == snap
+    else:
+        shared, fresh = got
+        assert len(shared) + len(fresh) == total
+        assert all(pool._ref[b] >= 1 for b in shared + fresh)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(min_value=0, max_value=10 ** 9))
+    def test_reserve_shortfall_leaves_pool_byte_identical(seed):
+        _rollback_property(seed)
+else:
+    @pytest.mark.parametrize("seed", range(100))
+    def test_reserve_shortfall_leaves_pool_byte_identical(seed):
+        _rollback_property(seed)
+
+
+def test_admit_rollback_engine_level(model):
+    """Through the real _admit_paged path: a shortfall admission that
+    matched registered prefix blocks restores the pool exactly."""
+    cfg, params = model
+    eng = _paged(cfg, params, n_slots=2, num_blocks=9,
+                 admission="worst_case")
+    base = list(range(5, 45))                         # 5 full blocks (bs=8)
+    eng.run([Request(rid=0, prompt=base, max_new=4)])
+    assert len(eng.pool._cached) == 5                 # registered, parked
+    eng.submit(Request(rid=1, prompt=[1, 2, 3, 4, 5, 6, 7, 8], max_new=8))
+    eng._admit()                                      # hogs 2 more blocks
+    snap = _snapshot(eng.pool)
+    entry = _QEntry(req=Request(rid=2, prompt=base + [77], max_new=30))
+    ok = eng._admit_paged(1, entry)
+    assert not ok                  # needs 8 blocks, only 1 free + 5 cached
+    assert _snapshot(eng.pool) == snap
+    out = eng.run([])                                 # rid 1 finishes clean
+    assert len(out[1]) == 8
+    assert eng.pool.in_use() == 0
